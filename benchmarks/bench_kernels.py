@@ -1,0 +1,67 @@
+"""Figure 8 / Appendix A — linear-op compute time across precisions.
+
+CPU cannot time TPU kernels, so this benchmark reports BOTH:
+  * measured: XLA-compiled CPU wall-time of the three dequantized linear
+    paths at identical logical shape (relative ordering only);
+  * derived: the TPU-side roofline prediction for decode GEMV — the op is
+    weight-bandwidth-bound, so time ~ weight bytes moved:
+        W1A8 packed : W2 (ternary) : FP16  =  1/16 : 1/4(2bit) : 1
+    matching the paper's 38% / 82% reductions in spirit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import (
+    QuantConfig,
+    binarize_weights,
+    quantize_activations_int8,
+    ternarize_weights,
+)
+from benchmarks.common import row, time_fn
+
+M, K, N = 64, 2048, 2048  # decode-ish GEMV batch at 7B-scale layer dims
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32) * 0.3)
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32) * 0.02)
+
+    def fp16_path(x, w):
+        return x.astype(jnp.bfloat16) @ w.astype(jnp.bfloat16)
+
+    def w1a8_path(x, w):
+        xq, _ = quantize_activations_int8(x)
+        wq, _ = binarize_weights(w)
+        return xq @ wq
+
+    def w2_path(x, w):
+        xq, _ = quantize_activations_int8(x)
+        wq, _ = ternarize_weights(w)
+        return xq @ wq
+
+    out = {}
+    for name, fn in (("fp16", fp16_path), ("w1a8_pquant", w1a8_path),
+                     ("w2_bitnet158", w2_path)):
+        f = jax.jit(fn)
+        us = time_fn(f, x, w)
+        out[name] = us
+        row(f"fig8/linear_cpu/{name}", us, f"shape={M}x{K}x{N}")
+
+    # derived TPU decode-GEMV weight traffic (the regime the paper measures)
+    wbytes = {"fp16": K * N * 2, "w2_bitnet158": K * N // 4,
+              "w1a8_pquant": K * N // 8}
+    for name, b in wbytes.items():
+        t_us = b / 819e9 * 1e6  # HBM-bound read time on v5e
+        row(f"fig8/tpu_derived/{name}", t_us, f"weight_bytes={b}")
+    red_vs_fp16 = 1 - wbytes["w1a8_pquant"] / wbytes["fp16"]
+    red_vs_w2 = 1 - wbytes["w1a8_pquant"] / wbytes["w2_bitnet158"]
+    row("fig8/tpu_derived/reduction", 0.0,
+        f"vs_fp16={red_vs_fp16:.1%};vs_2bit={red_vs_w2:.1%}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Table 2 proxy — main quality comparison at matched size and data:
+pQuant vs BitNet (1-bit) vs BitNet1.58 (2-bit) vs FP16, trained from
+scratch on the same synthetic corpus.  Reports final NLL and perplexity.
+
+Paper claim being checked: pQuant closes most of the 1-bit -> FP16 gap and
+lands between BitNet1.58 and FP16.
+"""
+
+from benchmarks.common import final_nll, ppl, quick_train, row, tiny_config, time_fn
+
+
+def run(steps: int = 120) -> dict:
+    results = {}
+    t_us = {}
+    for mode in ("pquant", "bitnet", "bitnet158", "none"):
+        import time
+
+        t0 = time.perf_counter()
+        hist, _ = quick_train(tiny_config(mode), steps=steps)
+        t_us[mode] = (time.perf_counter() - t0) * 1e6 / max(len(hist), 1)
+        results[mode] = final_nll(hist)
+    for mode, nll in results.items():
+        row(
+            f"table2/quality/{mode}",
+            t_us[mode],
+            f"nll={nll:.4f};ppl={ppl(nll):.2f}",
+        )
+    gap_closed = 0.0
+    if results["bitnet"] != results["none"]:
+        gap_closed = (results["bitnet"] - results["pquant"]) / max(
+            results["bitnet"] - results["none"], 1e-9
+        )
+    row("table2/gap_closed_vs_fp16", 0.0, f"frac={gap_closed:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

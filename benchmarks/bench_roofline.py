@@ -1,0 +1,36 @@
+"""Roofline summary benchmark — surfaces the dry-run-derived terms
+(results/roofline_baseline.json) as CSV rows, one per (arch x shape) cell.
+``us_per_call`` is the bound step time (max of the three terms)."""
+
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(path: str | None = None) -> list:
+    path = path or os.path.join(RESULTS, "roofline_baseline.json")
+    if not os.path.exists(path):
+        row("roofline/missing", 0.0, f"run launch/roofline.py first ({path})")
+        return []
+    recs = json.load(open(path))
+    ok = [r for r in recs if "error" not in r]
+    for r in ok:
+        bound_us = r["step_time_lower_bound_s"] * 1e6
+        row(
+            f"roofline/{r['arch']}/{r['shape']}",
+            bound_us,
+            f"bottleneck={r['bottleneck']};compute_ms={r['compute_s']*1e3:.1f};"
+            f"memory_ms={r['memory_s']*1e3:.1f};coll_ms={r['collective_s']*1e3:.1f};"
+            f"useful_flops={r['useful_flops_ratio']:.2f};"
+            f"peakGiB={r['memory']['peak_bytes']/2**30:.2f}",
+        )
+    n_bad = len(recs) - len(ok)
+    row("roofline/cells", 0.0, f"ok={len(ok)};failed={n_bad}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Figure 4 / Table 5 — scaling the number of routable 8-bit branches N.
+
+Paper claim: loss decreases monotonically-ish in N at constant *active*
+parameters, surpassing the 2-bit baseline by N=4..8.
+"""
+
+import time
+
+from benchmarks.common import final_nll, quick_train, row, tiny_config
+
+
+def run(steps: int = 120) -> dict:
+    results = {}
+    for n in (1, 2, 4):
+        t0 = time.perf_counter()
+        hist, _ = quick_train(tiny_config("pquant", n_experts=n), steps=steps)
+        us = (time.perf_counter() - t0) * 1e6 / max(len(hist), 1)
+        results[n] = final_nll(hist)
+        row(f"fig4/scaling/N={n}", us, f"nll={results[n]:.4f}")
+    t0 = time.perf_counter()
+    hist, _ = quick_train(tiny_config("bitnet158"), steps=steps)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(hist), 1)
+    nll2 = final_nll(hist)
+    row("fig4/scaling/bitnet158_ref", us, f"nll={nll2:.4f}")
+    best = min(results.values())
+    row("fig4/best_N_vs_2bit", 0.0, f"delta={nll2 - best:+.4f}")
+    return {"pquant_by_n": results, "bitnet158": nll2}
+
+
+if __name__ == "__main__":
+    run()

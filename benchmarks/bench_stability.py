@@ -1,0 +1,39 @@
+"""Figure 10 — training stability at aggressive hyperparameters.
+
+The paper observes BitNet training spikes/diverges at large batch+LR and
+needs checkpoint rollbacks, while pQuant stays stable.  We train both at a
+deliberately hot LR and count instability events (non-finite or >2x loss
+spikes).
+"""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import quick_train, row, tiny_config
+
+
+def _spikes(hist) -> int:
+    losses = [h["loss"] for h in hist]
+    spikes = sum(1 for a, b in zip(losses, losses[1:])
+                 if not np.isfinite(b) or b > a * 2.0)
+    return spikes
+
+
+def run(steps: int = 100) -> dict:
+    out = {}
+    for mode in ("bitnet", "pquant"):
+        t0 = time.perf_counter()
+        hist, tr = quick_train(tiny_config(mode), steps=steps, peak_lr=2e-2)
+        us = (time.perf_counter() - t0) * 1e6 / max(len(hist), 1)
+        out[mode] = {"spikes": _spikes(hist), "recoveries": tr.recoveries,
+                     "final": hist[-1]["loss"] if hist else float("nan")}
+        row(f"fig10/stability/{mode}", us,
+            f"spikes={out[mode]['spikes']};final={out[mode]['final']:.3f}")
+    row("fig10/pquant_no_less_stable", 0.0,
+        f"ok={out['pquant']['spikes'] <= out['bitnet']['spikes']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

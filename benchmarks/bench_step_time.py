@@ -1,0 +1,50 @@
+"""Table 8 / Appendix H — QAT training-time overhead vs FP16.
+
+Measures wall-clock per train step at identical dims: the fake-quant
+(quantize/dequantize/STE) graph adds elementwise work; the paper reports
+QAT training is slower than standard pre-training for this reason.  Also
+reports the HLO-FLOPs overhead ratio from the roofline pass when present.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, SyntheticSource, host_batch
+from repro.train.trainer import init_train_state, make_train_step
+from benchmarks.common import row, time_fn, tiny_config
+
+
+def run() -> dict:
+    out = {}
+    src = SyntheticSource(256, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in
+             host_batch(src, DataConfig(seq_len=64, global_batch=8), 0).items()}
+    base = None
+    for mode in ("none", "bitnet158", "pquant"):
+        cfg = tiny_config(mode, d_model=128, d_ff=256, n_layers=4)
+        state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(make_train_step(cfg, 100))
+        us = time_fn(step, state, batch, warmup=1, iters=3)
+        out[mode] = us
+        if mode == "none":
+            base = us
+        row(f"table8/step_time/{mode}", us,
+            f"overhead_vs_fp16={us / base:.2f}x" if base else "")
+    # roofline-derived QAT flops overhead (useful-FLOPs ratio), if available
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "roofline_baseline.json")
+    if os.path.exists(path):
+        recs = [r for r in json.load(open(path))
+                if r.get("kind") == "train" and "useful_flops_ratio" in r]
+        if recs:
+            avg = sum(r["useful_flops_ratio"] for r in recs) / len(recs)
+            row("table8/hlo_useful_flops_ratio_train", 0.0,
+                f"avg={avg:.2f};n={len(recs)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,97 @@
+"""Shared helpers for the benchmark harness: small-scale training runs and
+timing utilities.  Every benchmark prints ``name,us_per_call,derived`` CSV
+rows through :func:`row`."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.quantization import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticSource, host_batch
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line)
+    return line
+
+
+def tiny_config(
+    quant_mode: str = "pquant",
+    n_experts: int = 1,
+    d_model: int = 64,
+    d_ff: int = 128,
+    r: int = 16,
+    n_layers: int = 2,
+    vocab: int = 256,
+    **kw,
+) -> ModelConfig:
+    qc = QuantConfig(
+        mode=quant_mode,
+        r=r if quant_mode == "pquant" else 0,
+        num_experts=n_experts,
+    )
+    base = dict(
+        name=f"bench-{quant_mode}-n{n_experts}",
+        family="decoder",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=d_ff,
+        vocab_size=vocab,
+        max_seq_len=64,
+        quant=qc,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def quick_train(
+    cfg: ModelConfig,
+    steps: int = 80,
+    seq: int = 32,
+    batch: int = 8,
+    seed: int = 0,
+    peak_lr: float | None = None,
+):
+    """Train on the synthetic corpus; returns (history, trainer)."""
+    src = SyntheticSource(cfg.vocab_size, seed=seed)
+    dcfg = DataConfig(seq_len=seq, global_batch=batch, seed=seed)
+
+    def it():
+        for s in range(steps + 1):
+            yield s, host_batch(src, dcfg, s)
+
+    tcfg = TrainerConfig(total_steps=steps, log_every=10**9, ckpt_every=10**9,
+                         peak_lr=peak_lr)
+    tr = Trainer(cfg, tcfg, it())
+    hist = tr.run()
+    return hist, tr
+
+
+def final_nll(hist, k: int = 10) -> float:
+    return float(np.mean([h["nll"] for h in hist[-k:]]))
+
+
+def ppl(nll: float) -> float:
+    return float(np.exp(nll))
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time of fn(*args) in microseconds (blocks on output)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))

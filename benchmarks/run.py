@@ -1,0 +1,63 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §6):
+  Table 2   -> bench_quality       main quality, 4 modes trained from scratch
+  Fig 4/T5  -> bench_scaling       loss vs number of 8-bit branches N
+  Table 3   -> bench_matched       matched-total-params comparison
+  Fig 2/5a  -> bench_sensitivity   parameter-democratization scores
+  Figure 6  -> bench_memory        weight bytes moved per forward
+  Figure 8  -> bench_kernels       linear-op time across precisions
+  Table 8   -> bench_step_time     QAT step-time overhead
+  Figure 10 -> bench_stability     divergence/spike counts at hot LR
+  §Roofline -> bench_roofline      dry-run roofline terms per cell
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single benchmark id")
+    ap.add_argument("--steps", type=int, default=120,
+                    help="training steps for the learning benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_kernels,
+        bench_matched,
+        bench_memory,
+        bench_quality,
+        bench_roofline,
+        bench_scaling,
+        bench_sensitivity,
+        bench_stability,
+        bench_step_time,
+    )
+
+    suites = {
+        "memory": lambda: bench_memory.run(),
+        "kernels": lambda: bench_kernels.run(),
+        "roofline": lambda: bench_roofline.run(),
+        "step_time": lambda: bench_step_time.run(),
+        "quality": lambda: bench_quality.run(steps=args.steps),
+        "scaling": lambda: bench_scaling.run(steps=args.steps),
+        "matched": lambda: bench_matched.run(steps=args.steps),
+        "sensitivity": lambda: bench_sensitivity.run(steps=max(60, args.steps // 2)),
+        "stability": lambda: bench_stability.run(steps=max(80, args.steps // 2)),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — a failing suite shouldn't kill the run
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+        print(f"# suite {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Guarantees:
+  * atomic: data written to ``step_N.tmp/`` then os.replace'd into place —
+    a crash mid-save never corrupts the latest valid checkpoint;
+  * async: saves run on a background thread off the training loop
+    (``wait()`` joins before the next save or at exit);
+  * elastic: arrays are stored with logical (unsharded) shapes + a manifest
+    of tree structure, so a restore can re-shard onto ANY mesh (grow or
+    shrink the pod count between runs);
+  * bounded retention: keeps the last ``keep`` checkpoints.
+
+Layout:  <dir>/step_<N>/manifest.json + arrays.npz
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
+    import jax.tree_util as jtu
+
+    paths, treedef = jtu.tree_flatten_with_path(tree)
+    flat = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", ""))) for e in path)
+        flat.append((key, leaf))
+    return flat, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False):
+        """Snapshot to host memory synchronously, write to disk async."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            flat, _ = _flatten(host_tree)
+            # npz can't hold bfloat16 — store as a uint16 bit view and
+            # record the true dtype in the manifest
+            arrays = {}
+            for k, v in flat:
+                a = np.asarray(v)
+                if a.dtype == jnp.bfloat16:
+                    a = a.view(np.uint16)
+                arrays[k] = a
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            manifest = {
+                "step": step,
+                "keys": [k for k, _ in flat],
+                "shapes": {k: list(np.shape(v)) for k, v in flat},
+                "dtypes": {k: str(np.asarray(v).dtype) for k, v in flat},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, step: Optional[int] = None, shardings=None):
+        """Restore into the structure of ``like_tree``.
+
+        ``shardings``: optional pytree of NamedShardings — arrays are placed
+        (and thus re-sharded) directly onto the target mesh, enabling
+        elastic mesh changes between save and restore.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = _flatten(like_tree)
+        import ml_dtypes
+        import jax.tree_util as jtu
+
+        sh_flat = None
+        if shardings is not None:
+            sh_flat = [s for _, s in _flatten(shardings)[0]]
+        leaves = []
+        for i, (key, like) in enumerate(flat):
+            arr = data[key]
+            if manifest["dtypes"].get(key) == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16)
+            assert tuple(arr.shape) == tuple(np.shape(like)), (
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {np.shape(like)}"
+            )
+            if sh_flat is not None:
+                leaves.append(jax.device_put(arr, sh_flat[i]))
+            else:
+                leaves.append(jnp.asarray(arr, dtype=like.dtype))
+        return jtu.tree_unflatten(treedef, leaves)

@@ -1,0 +1,26 @@
+"""deepseek-coder-33b — dense code LM, llama-arch [arXiv:2401.14196].
+
+62L, d_model 7168, 56 heads GQA kv=8, d_ff 19200 SiLU-GLU, vocab 32256,
+rope theta 100k.  Pure full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import ModelConfig
+from repro.core.quantization import QuantConfig
+
+
+def make(quant_mode: str = "pquant", n_experts: int = 1, r: int = 1024) -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-coder-33b",
+        family="decoder",
+        n_layers=62,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=19200,
+        vocab_size=32256,
+        glu=True,
+        activation="silu",
+        rope_theta=100_000.0,
+        tie_embeddings=False,
+        quant=QuantConfig(mode=quant_mode, r=r, num_experts=n_experts),
+    )

@@ -1,0 +1,31 @@
+"""phi-3-vision-4.2b — VLM backbone (phi3-mini + CLIP frontend stub)
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+32L, d_model 3072, 32 heads (MHA), d_ff 8192 SiLU-GLU, vocab 32064.  The
+CLIP vision tower is a STUB: input_specs provide 576 precomputed patch
+embeddings prepended to the text sequence (assignment rules).  Full
+attention -> long_500k skipped.
+"""
+
+from repro.configs.base import ModelConfig
+from repro.core.quantization import QuantConfig
+
+
+def make(quant_mode: str = "pquant", n_experts: int = 1, r: int = 384) -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b",
+        family="decoder",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        glu=True,
+        activation="silu",
+        rope_theta=10000.0,
+        frontend="vision",
+        n_image_tokens=576,
+        tie_embeddings=False,
+        quant=QuantConfig(mode=quant_mode, r=r, num_experts=n_experts),
+    )

@@ -1,0 +1,107 @@
+"""Architecture registry: ``--arch <id>`` resolution, reduced smoke configs,
+and the full (arch x shape) cell enumeration used by the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.configs import (
+    base,
+    deepseek_coder_33b,
+    deepseek_moe_16b,
+    deepseek_v2_236b,
+    gemma3_27b,
+    granite_20b,
+    h2o_danube_1_8b,
+    mamba2_780m,
+    phi_3_vision_4_2b,
+    pquant_paper,
+    recurrentgemma_2b,
+    whisper_large_v3,
+)
+from repro.configs.base import ModelConfig, ShapeConfig, shapes_for
+
+ARCHS: dict[str, Callable[..., ModelConfig]] = {
+    "granite-20b": granite_20b.make,
+    "gemma3-27b": gemma3_27b.make,
+    "h2o-danube-1.8b": h2o_danube_1_8b.make,
+    "deepseek-coder-33b": deepseek_coder_33b.make,
+    "whisper-large-v3": whisper_large_v3.make,
+    "deepseek-v2-236b": deepseek_v2_236b.make,
+    "deepseek-moe-16b": deepseek_moe_16b.make,
+    "phi-3-vision-4.2b": phi_3_vision_4_2b.make,
+    "mamba2-780m": mamba2_780m.make,
+    "recurrentgemma-2b": recurrentgemma_2b.make,
+    # the paper's own sizes (+100m CPU-trainable driver size)
+    "pquant-100m": lambda **kw: pquant_paper.make("100m", **kw),
+    "pquant-300m": lambda **kw: pquant_paper.make("300m", **kw),
+    "pquant-700m": lambda **kw: pquant_paper.make("700m", **kw),
+    "pquant-1.3b": lambda **kw: pquant_paper.make("1.3b", **kw),
+    "pquant-2.6b": lambda **kw: pquant_paper.make("2.6b", **kw),
+}
+
+ASSIGNED = [
+    "granite-20b",
+    "gemma3-27b",
+    "h2o-danube-1.8b",
+    "deepseek-coder-33b",
+    "whisper-large-v3",
+    "deepseek-v2-236b",
+    "deepseek-moe-16b",
+    "phi-3-vision-4.2b",
+    "mamba2-780m",
+    "recurrentgemma-2b",
+]
+
+
+def get_config(arch: str, **kwargs) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch](**kwargs)
+
+
+def all_cells(quant_mode: str = "pquant"):
+    """Every assigned (arch x shape) cell, honouring long_500k skip rules."""
+    for arch in ASSIGNED:
+        cfg = get_config(arch, quant_mode=quant_mode)
+        for shape in shapes_for(cfg):
+            yield arch, cfg, shape
+
+
+def reduced(cfg: ModelConfig, vocab: int = 512) -> ModelConfig:
+    """Family-faithful reduced config for CPU smoke tests: few layers, small
+    width, few experts, tiny vocab — all feature flags preserved."""
+    d_model = 64
+    n_heads = max(2, min(4, cfg.n_heads))
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    head_dim = d_model // n_heads if cfg.head_dim == cfg.d_model // cfg.n_heads else 32
+    repl = dict(
+        n_layers=min(cfg.n_layers, 4 if not cfg.block_pattern else len(cfg.block_pattern) + 1),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=96 if cfg.d_ff else 0,
+        vocab_size=vocab,
+        max_seq_len=128,
+        window_size=min(cfg.window_size, 16) if cfg.window_size else 0,
+        global_every=min(cfg.global_every, 2) if cfg.global_every else 0,
+        quant=dataclasses.replace(cfg.quant, r=16 if cfg.quant.r else 0),
+    )
+    if cfg.attn_type == "mla":
+        repl.update(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                    qk_rope_dim=8, v_head_dim=16, head_dim=24)
+    if cfg.moe:
+        repl.update(n_routed_experts=8, moe_top_k=min(cfg.moe_top_k, 2),
+                    n_shared_experts=min(cfg.n_shared_experts, 1), d_ff_expert=32)
+    if cfg.family == "ssm":
+        repl.update(ssm_state=16, ssm_headdim=16, ssm_chunk=16,
+                    n_heads=8, n_kv_heads=8, head_dim=16)
+    if cfg.family == "hybrid":
+        repl.update(lru_width=d_model)
+    if cfg.family == "encdec":
+        repl.update(n_enc_layers=2, n_frontend_tokens=12)
+    if cfg.n_image_tokens:
+        repl.update(n_image_tokens=8)
+    return dataclasses.replace(cfg, **repl)

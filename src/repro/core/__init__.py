@@ -1,0 +1,21 @@
+"""pQuant core: quantizers, decoupled linear layer, routable 8-bit experts,
+sensitivity analysis, and inference bit-packing."""
+
+from repro.core.quantization import (  # noqa: F401
+    QuantConfig,
+    binarize_weights,
+    ternarize_weights,
+    quantize_activations_int8,
+    quantize_weights_int8,
+    effective_bits,
+    ste,
+    ste_sign,
+    ste_round,
+)
+from repro.core.decoupled import (  # noqa: F401
+    init_decoupled_ffn,
+    decoupled_ffn,
+    set_feature_scaling,
+)
+from repro.core.bitlinear import bitlinear, init_linear, init_rmsnorm, rmsnorm  # noqa: F401
+from repro.core.routing import RouterConfig  # noqa: F401

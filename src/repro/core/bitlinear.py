@@ -1,0 +1,91 @@
+"""BitLinear: the 1-bit linear layer used for all MHA projections (paper §3.1).
+
+Forward (training, fake-quant):  Y = lambda/gamma * W_int1 @ Q(RMSNorm(X))
+implemented as  Y = binarize(W) @ quant_act(X)  on the dequantized grid so
+autodiff + STE handle the backward pass.  The true integer path (packed
+weights, INT8 GEMM) is exercised by ``repro.kernels`` at inference.
+
+Convention used across the framework: every module exposes
+
+    init_<name>(key, ...) -> (params, axes)
+
+where ``params`` is a pytree of arrays and ``axes`` is an identically
+structured pytree of logical-axis tuples consumed by
+``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (
+    QuantConfig,
+    fake_quant_linear_weights,
+    maybe_quant_acts,
+)
+
+Array = jax.Array
+
+
+def init_linear(
+    key: Array,
+    d_in: int,
+    d_out: int,
+    axes: Sequence[str | None],
+    dtype=jnp.float32,
+    scale: Optional[float] = None,
+):
+    """Dense kernel init (truncated-normal fan-in, LLaMA-style)."""
+    if scale is None:
+        scale = d_in**-0.5
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out), dtype) * scale
+    return {"w": w}, {"w": tuple(axes)}
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32, axis: str | None = None):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (axis,)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def bitlinear(
+    params,
+    x: Array,
+    cfg: QuantConfig,
+    sublayer_norm=None,
+    waxes=None,
+) -> Array:
+    """Apply a (possibly quantized) linear layer.
+
+    sublayer_norm: optional RMSNorm params applied to the *input* before
+    activation quantization (BitNet SubLN placement, paper Appendix B: the
+    norm compresses the activation dynamic range so AbsMax INT8 behaves).
+    waxes: the weight's logical axes — required for the INT8 quantized
+    FSDP gather (cfg.qgather, see repro.distributed.qgather).
+    """
+    if sublayer_norm is not None:
+        x = rmsnorm(sublayer_norm, x)
+    w = params["w"]
+    if cfg.mode == "none" and not isinstance(w, dict):
+        return x @ w.astype(x.dtype)
+    xq = maybe_quant_acts(x, cfg)
+    if cfg.qgather and waxes is not None and cfg.mode in ("bitnet", "pquant"):
+        from repro.distributed.qgather import binarize_gather
+
+        wq = binarize_gather(w, tuple(waxes)).astype(x.dtype)
+    else:
+        wq = fake_quant_linear_weights(w, cfg).astype(x.dtype)
+    return xq @ wq
+
+
+def linear_param_count(d_in: int, d_out: int) -> int:
+    return d_in * d_out

@@ -1,0 +1,337 @@
+"""The decoupled FFN layer — pQuant's core contribution (paper §3.2, Eq. 11).
+
+    Y = alpha * FFN^{INT8}_{[:r]}(LN(x)) + beta * FFN^{INT1}_{[r:]}(LN(x))
+
+The FFN hidden dimension is structurally split: ``r`` hidden units route
+through an INT8 branch (weights + activations INT8), the remaining
+``d_ff_1bit`` units through the 1-bit branch (sign/AbsMean weights, INT8
+activations).  ``alpha`` and ``beta`` are learnable scalars initialised
+``alpha >> beta`` so the high-precision path receives stronger gradient
+feedback — this is the *feature scaling* that guides sensitive parameters
+into the 8-bit branch instead of pre-assigning positions.
+
+§3.3 scaling: the 8-bit branch is replicated ``N`` times and a top-1
+softmax router picks one branch per token; the 1-bit branch acts as the
+always-active shared expert.  Active parameter count is constant in N.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing
+from repro.core.bitlinear import init_linear, init_rmsnorm, rmsnorm
+from repro.distributed.sharding import shard_hint
+from repro.core.quantization import (
+    QuantConfig,
+    maybe_quant_acts,
+    quantize_weights_int8_stacked,
+    fake_quant_linear_weights,
+)
+from repro.core.routing import RouterConfig
+
+Array = jax.Array
+
+ACTIVATIONS: dict[str, Callable[[Array], Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def init_decoupled_ffn(
+    key: Array,
+    d_model: int,
+    d_ff_1bit: int,
+    r: int,
+    num_experts: int = 1,
+    glu: bool = True,
+    dtype=jnp.float32,
+    alpha_init: float = 2.0,
+    beta_init: float = 0.2,
+):
+    """Parameters for a decoupled (GLU-)FFN.
+
+    1-bit branch: gate/up (d_model, d_ff_1bit), down (d_ff_1bit, d_model).
+    8-bit branch: stacked over experts, gate/up (N, d_model, r),
+    down (N, r, d_model).  ``r == 0`` degenerates to a plain quantized FFN;
+    ``d_ff_1bit == 0`` to a pure 8-bit FFN (both exercised in tests).
+    """
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+    axes: dict = {}
+
+    def add(name, p, a):
+        params[name] = p
+        axes[name] = a
+
+    s_in = d_model**-0.5
+    if d_ff_1bit > 0:
+        if glu:
+            add(
+                "w1_gate",
+                jax.random.truncated_normal(
+                    keys[0], -3, 3, (d_model, d_ff_1bit), dtype
+                )
+                * s_in,
+                ("embed", "ffn"),
+            )
+        add(
+            "w1_up",
+            jax.random.truncated_normal(keys[1], -3, 3, (d_model, d_ff_1bit), dtype)
+            * s_in,
+            ("embed", "ffn"),
+        )
+        add(
+            "w1_down",
+            jax.random.truncated_normal(keys[2], -3, 3, (d_ff_1bit, d_model), dtype)
+            * (d_ff_1bit**-0.5),
+            ("ffn", "embed"),
+        )
+    if r > 0:
+        n = num_experts
+        if glu:
+            add(
+                "w8_gate",
+                jax.random.truncated_normal(keys[3], -3, 3, (n, d_model, r), dtype)
+                * s_in,
+                ("experts", "embed", "ffn8"),
+            )
+        add(
+            "w8_up",
+            jax.random.truncated_normal(keys[4], -3, 3, (n, d_model, r), dtype)
+            * s_in,
+            ("experts", "embed", "ffn8"),
+        )
+        add(
+            "w8_down",
+            jax.random.truncated_normal(keys[5], -3, 3, (n, r, d_model), dtype)
+            * (r**-0.5),
+            ("experts", "ffn8", "embed"),
+        )
+        # feature scaling (paper §3.2): learnable scalars, alpha >> beta
+        add("alpha", jnp.asarray(alpha_init, dtype), ())
+        add("beta", jnp.asarray(beta_init, dtype), ())
+        if n > 1:
+            rp, ra = routing.init_router(
+                keys[6], d_model, RouterConfig(num_experts=n, top_k=1)
+            )
+            add("router", rp, {"w": ra["w"]})
+    # SubLN before the down-projection (BitNet placement, Appendix B)
+    ln_p, ln_a = init_rmsnorm(d_ff_1bit if d_ff_1bit > 0 else r, dtype, axis="ffn")
+    add("subln", ln_p, ln_a)
+    return params, axes
+
+
+def set_feature_scaling(params, alpha: float, beta: float):
+    """Initialise alpha/beta after init (kept separate so ablations can
+    re-initialise; paper §4.6 studies (1.0, 0.5) vs (2.0, 0.2))."""
+    if "alpha" in params:
+        params["alpha"] = jnp.asarray(alpha, params["alpha"].dtype)
+        params["beta"] = jnp.asarray(beta, params["beta"].dtype)
+    return params
+
+
+def _branch8_apply(params, x: Array, glu: bool, act_fn, qcfg: QuantConfig) -> Array:
+    """Batched-over-experts 8-bit FFN: x (N, C, D) -> (N, C, D)."""
+    wq = lambda w: (
+        w if qcfg.mode == "none" else quantize_weights_int8_stacked(w)[0]
+    ).astype(x.dtype)
+    xq = maybe_quant_acts(x, qcfg)
+    up = jnp.einsum("ncd,ndr->ncr", xq, wq(params["w8_up"]))
+    if glu:
+        gate = jnp.einsum("ncd,ndr->ncr", xq, wq(params["w8_gate"]))
+        h = act_fn(gate) * up
+    else:
+        h = act_fn(up)
+    hq = maybe_quant_acts(h, qcfg)
+    return jnp.einsum("ncr,nrd->ncd", hq, wq(params["w8_down"]))
+
+
+def _branch1_apply(params, x: Array, glu: bool, act_fn, qcfg: QuantConfig) -> Array:
+    """1-bit FFN branch: x (T, D) -> (T, D)."""
+    if qcfg.qgather and qcfg.mode in ("bitnet", "pquant"):
+        from repro.distributed.qgather import binarize_gather
+
+        def wq(w, axes):
+            return binarize_gather(w, axes).astype(x.dtype)
+    else:
+        def wq(w, axes):
+            del axes
+            return fake_quant_linear_weights(w, qcfg).astype(x.dtype)
+
+    xq = maybe_quant_acts(x, qcfg)
+    up = xq @ wq(params["w1_up"], ("embed", "ffn"))
+    # SHARDING NOTE: SubLN + per-token AbsMax need full-d_ff statistics,
+    # which breaks GSPMD's Megatron FFN pattern — without an explicit
+    # constraint the partitioner replicates the whole FFN over `model`
+    # (16x FLOPs).  Pinning the hidden activation to (batch, model) turns
+    # the norm/absmax into cheap per-token cross-model all-reduces and
+    # keeps both dots sharded.  (EXPERIMENTS.md §Perf, iteration 0.)
+    up = shard_hint(up, "batch", "act_ffn")
+    if glu:
+        h = act_fn(xq @ wq(params["w1_gate"], ("embed", "ffn"))) * up
+    else:
+        h = act_fn(up)
+    h = shard_hint(h, "batch", "act_ffn")
+    if qcfg.mode != "none":
+        # SubLN (BitNet placement) compresses the dynamic range ahead of the
+        # down-projection's activation quantization; the FP baseline (LLaMA)
+        # has no such norm, so skip it there for fidelity.
+        h = rmsnorm(params["subln"], h)
+    hq = maybe_quant_acts(h, qcfg)
+    return hq @ wq(params["w1_down"], ("ffn", "embed"))
+
+
+def decoupled_ffn(
+    params,
+    x: Array,
+    qcfg: QuantConfig,
+    glu: bool = True,
+    activation: str = "silu",
+    router_cfg: RouterConfig | None = None,
+):
+    """Apply the decoupled FFN.  x: (..., D).  Returns (y, aux_loss).
+
+    aux_loss is zero unless the 8-bit branch is routed (N > 1).
+    """
+    act_fn = ACTIVATIONS[activation]
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    t = xf.shape[0]
+    aux = jnp.zeros((), jnp.float32)
+
+    y = jnp.zeros_like(xf)
+    has_1bit = "w1_up" in params
+    has_8bit = "w8_up" in params
+
+    if has_1bit:
+        y1 = _branch1_apply(params, xf, glu, act_fn, qcfg)
+        beta = params["beta"].astype(x.dtype) if has_8bit else jnp.asarray(1.0, x.dtype)
+        y = y + beta * y1
+
+    if has_8bit:
+        w8 = params["w8_up"]
+        n = (w8["q"] if isinstance(w8, dict) else w8).shape[0]
+        if n == 1:
+            y8 = _branch8_apply(params, xf[None], glu, act_fn, qcfg)[0]
+        else:
+            assert router_cfg is not None and router_cfg.num_experts == n
+            y8, aux = routing.route_and_apply(
+                params["router"],
+                xf,
+                router_cfg,
+                lambda xe: _branch8_apply(params, xe, glu, act_fn, qcfg),
+            )
+        y = y + params["alpha"].astype(x.dtype) * y8
+
+    return y.reshape(*lead, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Decoupled projection — the FFN-free adaptation (DESIGN.md §5, SSM family)
+# ---------------------------------------------------------------------------
+
+
+def init_decoupled_proj(
+    key: Array,
+    d_in: int,
+    d_out: int,
+    r: int,
+    axes_in: str | None = "embed",
+    axes_out: str | None = "ffn",
+    num_experts: int = 1,
+    dtype=jnp.float32,
+    alpha_init: float = 2.0,
+    beta_init: float = 0.2,
+):
+    """Decoupled single linear: dominant 1-bit W plus a compact 8-bit
+    bottleneck branch (d_in -> r -> d_out) with feature scaling.
+
+    This adapts the paper's FFN-hidden-dim split to layers that are plain
+    projections (Mamba-2 in/out projections have no FFN hidden dim to
+    split).  The 8-bit branch stays ``r``-narrow so the bits/weight budget
+    matches the paper's Table 1 accounting.
+    """
+    ks = jax.random.split(key, 4)
+    n = num_experts
+    params = {
+        "w1": jax.random.truncated_normal(ks[0], -3, 3, (d_in, d_out), dtype)
+        * (d_in**-0.5),
+        "w8_a": jax.random.truncated_normal(ks[1], -3, 3, (n, d_in, r), dtype)
+        * (d_in**-0.5),
+        "w8_b": jax.random.truncated_normal(ks[2], -3, 3, (n, r, d_out), dtype)
+        * (r**-0.5),
+        "alpha": jnp.asarray(alpha_init, dtype),
+        "beta": jnp.asarray(beta_init, dtype),
+    }
+    axes = {
+        "w1": (axes_in, axes_out),
+        "w8_a": ("experts", axes_in, "ffn8"),
+        "w8_b": ("experts", "ffn8", axes_out),
+        "alpha": (),
+        "beta": (),
+    }
+    if n > 1:
+        rp, ra = routing.init_router(ks[3], d_in, RouterConfig(num_experts=n, top_k=1))
+        params["router"], axes["router"] = rp, ra
+    return params, axes
+
+
+def decoupled_proj(
+    params,
+    x: Array,
+    qcfg: QuantConfig,
+    router_cfg: RouterConfig | None = None,
+):
+    """Apply a decoupled projection over (..., d_in). Returns (y, aux)."""
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    aux = jnp.zeros((), jnp.float32)
+    xq = maybe_quant_acts(xf, qcfg)
+    w1q = fake_quant_linear_weights(params["w1"], qcfg).astype(x.dtype)
+    y = params["beta"].astype(x.dtype) * (xq @ w1q)
+
+    w8q = lambda w: (
+        w if qcfg.mode == "none" else quantize_weights_int8_stacked(w)[0]
+    ).astype(x.dtype)
+
+    def branch(xe: Array) -> Array:  # xe: (N, C, d_in)
+        xeq = maybe_quant_acts(xe, qcfg)
+        h = jnp.einsum("ncd,ndr->ncr", xeq, w8q(params["w8_a"]))
+        hq = maybe_quant_acts(h, qcfg)
+        return jnp.einsum("ncr,nrd->ncd", hq, w8q(params["w8_b"]))
+
+    w8a = params["w8_a"]
+    n = (w8a["q"] if isinstance(w8a, dict) else w8a).shape[0]
+    if n == 1:
+        y8 = branch(xf[None])[0]
+    else:
+        assert router_cfg is not None
+        y8, aux = routing.route_and_apply(params["router"], xf, router_cfg, branch)
+    y = y + params["alpha"].astype(x.dtype) * y8
+    return y.reshape(*lead, -1), aux
+
+
+def decoupled_ffn_flops(
+    d_model: int, d_ff_1bit: int, r: int, glu: bool, tokens: int
+) -> int:
+    """Active-path MACs*2 per ``tokens`` tokens (top-1: one 8-bit branch)."""
+    mats = 3 if glu else 2
+    per_tok = mats * d_model * (d_ff_1bit + r) * 2
+    return per_tok * tokens
+
+
+def decoupled_param_counts(
+    d_model: int, d_ff_1bit: int, r: int, num_experts: int, glu: bool
+) -> tuple[int, int]:
+    """(n_1bit_params, n_8bit_params) for effective-bits accounting."""
+    mats = 3 if glu else 2
+    n1 = mats * d_model * d_ff_1bit
+    n8 = mats * d_model * r * num_experts
+    return n1, n8

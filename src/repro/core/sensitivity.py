@@ -1,0 +1,76 @@
+"""Perturbation-based weight sensitivity (paper §2.3, Eq. 1-2) and the
+*parameter democratization* score used to reproduce Figures 2 and 5a.
+
+For weight w_ij of W (d_in, d_out) under calibration inputs X (T, d_in),
+
+    s_ij = w_ij^2 / ( 2 * [(X^T X)^{-1}]_jj )      (generalized OBS)
+
+with quant(w_ij) = 0 as the perturbation (the paper's choice for probing
+the landscape).  Note the Hessian of ||XW - XW'||^2 w.r.t. a column of W is
+H = X^T X (row-vector convention in the paper; our X is (tokens, features)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def input_hessian(x: Array, damp_frac: float = 1e-2) -> Array:
+    """H = X^T X over a flat calibration batch, with GPTQ-style dampening."""
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    h = xf.T @ xf
+    damp = damp_frac * jnp.mean(jnp.diag(h)) + 1e-8
+    return h + damp * jnp.eye(h.shape[0], dtype=h.dtype)
+
+
+def obs_sensitivity(w: Array, x: Array, damp_frac: float = 1e-2) -> Array:
+    """Per-weight OBS sensitivity map, same shape as ``w`` (d_in, d_out)."""
+    h = input_hessian(x, damp_frac)
+    h_inv_diag = jnp.diag(jnp.linalg.inv(h))  # (d_in,)
+    return (w.astype(jnp.float32) ** 2) / (2.0 * h_inv_diag[:, None] + 1e-12)
+
+
+def democratization_score(sens: Array, eps: float = 1e-12) -> Array:
+    """Scalar in (0, 1]: how *uniform* the sensitivity landscape is.
+
+    Normalised entropy of the sensitivity distribution: 1.0 means perfectly
+    democratized (all weights equally sensitive, the BitNet pathology);
+    small values mean a differentiated landscape (FP16 / pQuant behaviour).
+    """
+    s = sens.reshape(-1).astype(jnp.float32)
+    p = s / (jnp.sum(s) + eps)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p + eps), 0.0))
+    return ent / jnp.log(jnp.asarray(float(s.size)))
+
+
+def sensitivity_kurtosis(sens: Array) -> Array:
+    """Excess kurtosis of log-sensitivity — heavy tails = differentiated
+    landscape.  Complementary view to the entropy score."""
+    ls = jnp.log(sens.reshape(-1).astype(jnp.float32) + 1e-20)
+    mu = jnp.mean(ls)
+    sd = jnp.std(ls) + 1e-12
+    return jnp.mean(((ls - mu) / sd) ** 4) - 3.0
+
+
+def top_fraction_mass(sens: Array, frac: float = 0.01) -> Array:
+    """Share of total sensitivity mass held by the top ``frac`` of weights.
+
+    FP16 models concentrate a large share in few weights; democratized 1-bit
+    models spread it thin.  (Used in bench_sensitivity.)
+    """
+    s = jnp.sort(sens.reshape(-1).astype(jnp.float32))[::-1]
+    k = max(1, int(s.size * frac))
+    return jnp.sum(s[:k]) / (jnp.sum(s) + 1e-12)
+
+
+def max_pool_2d(sens: Array, out_shape: tuple[int, int]) -> Array:
+    """Down-sample a sensitivity map by max-pooling, as the paper does for
+    visualisation (Figure 2)."""
+    m, n = sens.shape
+    om, on = out_shape
+    pm, pn = m // om, n // on
+    trimmed = sens[: om * pm, : on * pn]
+    return trimmed.reshape(om, pm, on, pn).max(axis=(1, 3))

@@ -1,0 +1,93 @@
+"""INT8 gradient compression with error feedback (DESIGN.md §4).
+
+For cross-pod data parallelism the gradient all-reduce dominates DCI/ICI
+traffic.  Each worker quantizes its local gradient to INT8 against a
+*shared* per-chunk scale (one extra scalar all-reduce), sums in INT32, and
+dequantizes; the local quantization residual is carried to the next step
+(error feedback), which keeps SGD/Adam convergence (Karimireddy et al.).
+
+Two entry points:
+  * ``compress_psum`` — inside shard_map: explicit psum path (true wire
+    compression; used by the ddp-compressed trainer mode and tests).
+  * ``fake_compress`` — pure local quantize+residual (models the numerics
+    under pjit where the partitioner owns the collective).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _chunk_absmax(g: Array, chunk: int) -> Array:
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    return jnp.max(jnp.abs(flat.reshape(-1, chunk)), axis=1)
+
+
+def _quant_chunks(g: Array, scales: Array, chunk: int):
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % chunk
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, chunk)
+    q = jnp.clip(jnp.round(flat / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, n
+
+
+def _dequant_chunks(q: Array, scales: Array, n: int, shape) -> Array:
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_psum(g: Array, residual: Array, axis_name: str, chunk: int = 1024):
+    """Error-feedback INT8 all-reduce for one gradient tensor.
+
+    Call inside shard_map with ``axis_name`` mapped.  Returns
+    (mean_gradient fp32, new_residual).
+    """
+    g = g.astype(jnp.float32) + residual
+    # shared scale: max over workers so every worker uses the same grid
+    amax = _chunk_absmax(g, chunk)
+    amax = jax.lax.pmax(amax, axis_name)
+    scales = jnp.maximum(amax, 1e-12) / 127.0
+    q, n = _quant_chunks(g, scales, chunk)
+    local_dq = _dequant_chunks(q, scales, n, g.shape)
+    new_residual = g - local_dq  # what this worker failed to transmit
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    world = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    mean = _dequant_chunks(
+        summed.astype(jnp.float32) / world.astype(jnp.float32), scales, n, g.shape
+    )
+    # NOTE: summed is int32 on the wire conceptually; XLA moves int32 here.
+    # Byte win comes from q being int8 at the ring stage in a real ICI
+    # implementation (reduce-scatter int8 + all-gather int8), modeled in
+    # EXPERIMENTS.md §Perf via collective-bytes accounting.
+    return mean, new_residual
+
+
+def fake_compress(g: Array, residual: Array, chunk: int = 1024):
+    """Local-only quantize + error feedback (numerics model, no collective)."""
+    g = g.astype(jnp.float32) + residual
+    amax = _chunk_absmax(g, chunk)
+    scales = jnp.maximum(amax, 1e-12) / 127.0
+    q, n = _quant_chunks(g, scales, chunk)
+    dq = _dequant_chunks(q, scales, n, g.shape)
+    return dq, g - dq
+
+
+def init_residuals(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def tree_compress_psum(grads, residuals, axis_name: str, chunk: int = 1024):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [compress_psum(g, r, axis_name, chunk) for g, r in zip(flat_g, flat_r)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

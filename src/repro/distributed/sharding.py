@@ -1,0 +1,179 @@
+"""Logical-axis sharding (MaxText-style).
+
+Model code annotates parameters and activations with *logical* axis names;
+a rule table maps logical axes to mesh axes.  ``shard_hint`` is a no-op
+when no mesh is active, so single-device tests/examples run unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Logical -> mesh axis rules
+# ---------------------------------------------------------------------------
+
+# Default production rules (see DESIGN.md §4).  Order matters only for
+# documentation; each logical axis maps to zero or more mesh axes.
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,            # sequence kept unsharded by default (SP optional)
+    "resid_seq": None,      # residual stream between blocks (SP: -> "model")
+    "act_embed": None,
+    "act_heads": "model",
+    "act_ffn": "model",
+    "cache_seq": None,      # long_500k overrides to "data"
+    "cache_heads": "model",
+    # parameters
+    "vocab": "model",
+    "embed": "data",        # FSDP: weights sharded over the data axis
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "ffn8": None,           # pQuant 8-bit branch hidden dim (small; see §Perf)
+    "experts": "model",     # stacked expert axis (pQuant branches / MoE -> EP)
+    "expert_ffn": None,     # per-expert hidden dim (EP shards experts instead)
+    "lora": None,           # MLA low-rank dims stay replicated
+    "conv": None,
+    "state": None,
+}
+
+
+class _RuleState(threading.local):
+    def __init__(self):
+        self.rules: dict[str, Any] = dict(DEFAULT_RULES)
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _RuleState()
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Optional[Mesh], overrides: Optional[dict] = None):
+    """Activate a mesh + rule overrides for model tracing."""
+    old_rules, old_mesh = _STATE.rules, _STATE.mesh
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = old_rules, old_mesh
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def _mesh_axes_for(logical: Optional[str], mesh: Mesh):
+    if logical is None:
+        return None
+    mapped = _STATE.rules.get(logical, None)
+    if mapped is None:
+        return None
+    if isinstance(mapped, str):
+        mapped = (mapped,)
+    # drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh)
+    present = tuple(a for a in mapped if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    mesh = mesh or _STATE.mesh
+    if mesh is None:
+        return P()
+    return P(*[_mesh_axes_for(a, mesh) for a in axes])
+
+
+def _dim_divisible(shape, spec: P, mesh: Mesh) -> bool:
+    for size, ax in zip(shape, tuple(spec)):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if size % n != 0:
+            return False
+    return True
+
+
+def shard_hint(x: Array, *axes: Optional[str]) -> Array:
+    """Constrain an activation's sharding by logical axes.  No-op without an
+    active mesh; silently relaxes axes whose dim isn't divisible (e.g. MQA's
+    single KV head on a 16-way model axis)."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, mesh)
+    if not _dim_divisible(x.shape, spec, mesh):
+        relaxed = []
+        for size, a in zip(x.shape, axes):
+            s = _mesh_axes_for(a, mesh)
+            if s is None:
+                relaxed.append(None)
+                continue
+            saxes = (s,) if isinstance(s, str) else s
+            n = int(np.prod([mesh.shape[m] for m in saxes]))
+            relaxed.append(s if size % n == 0 else None)
+        spec = P(*relaxed)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(axes_tree, mesh: Mesh) -> Any:
+    """Map an axes pytree (from init) to NamedShardings (no shape check)."""
+
+    def one(axes):
+        return NamedSharding(mesh, logical_to_spec(axes, mesh))
+
+    return jax.tree.map(one, axes_tree, is_leaf=lambda t: isinstance(t, tuple))
+
+
+def _lookup_path(tree, path):
+    node = tree
+    for entry in path:
+        key = getattr(entry, "key", None)  # DictKey
+        if key is None:
+            key = getattr(entry, "idx", None)  # SequenceKey
+        if key is None:
+            key = getattr(entry, "name", None)  # GetAttrKey (NamedTuple)
+        if isinstance(node, tuple) and hasattr(node, "_fields") and isinstance(key, str):
+            node = getattr(node, key)
+        else:
+            node = node[key]
+    return node
+
+
+def param_sharding_for(params_tree, axes_tree, mesh: Mesh) -> Any:
+    """Map params (arrays or ShapeDtypeStructs) + their logical-axes tree to
+    NamedShardings, relaxing any axis whose dim isn't divisible by the mesh
+    (e.g. a single MQA KV head against a 16-way model axis)."""
+    import jax.tree_util as jtu
+
+    paths_and_leaves, treedef = jtu.tree_flatten_with_path(params_tree)
+    out = []
+    for path, p in paths_and_leaves:
+        axes = _lookup_path(axes_tree, path)
+        assert len(axes) == len(p.shape), f"{axes} vs {p.shape} at {path}"
+        relaxed = []
+        for size, a in zip(p.shape, axes):
+            s = _mesh_axes_for(a, mesh)
+            if s is None:
+                relaxed.append(None)
+                continue
+            saxes = (s,) if isinstance(s, str) else s
+            n = int(np.prod([mesh.shape[m] for m in saxes]))
+            relaxed.append(s if size % n == 0 else None)
+        out.append(NamedSharding(mesh, P(*relaxed)))
+    return jtu.tree_unflatten(treedef, out)

@@ -1,0 +1,118 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: CPU fallback (interpret=True so the kernel *body* is executed and
+validated on CPU), ragged-shape padding to tile multiples, and the
+quantize -> kernel -> output plumbing used by the serving path
+(``repro.train.serve`` W1A8 inference).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decoupled_matmul import decoupled_matmul
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.rmsnorm_quant import rmsnorm_quant
+from repro.kernels.w1a8_matmul import w1a8_matmul
+
+Array = jax.Array
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: Array, mult: int):
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, m
+
+
+def quantize_act_int8(x: Array):
+    """Per-token AbsMax INT8 (runtime, true-integer path)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    gamma = 127.0 / (amax + 1e-5)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * gamma[:, None]), -127, 127)
+    return q.astype(jnp.int8), gamma
+
+
+def bit_linear_infer(
+    x: Array, w_packed: Array, lam: Array, out_dtype=jnp.bfloat16
+) -> Array:
+    """Full W1A8 inference linear: quantize acts -> packed 1-bit matmul.
+
+    x: (..., K) float; w_packed: (K//8, N) uint8; lam: scalar.
+    """
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    xq, gamma = quantize_act_int8(xf)
+    bm = 8 if xq.shape[0] <= 128 else 128
+    xq, m = _pad_rows(xq, bm)
+    gamma_p, _ = _pad_rows(gamma + (gamma == 0), bm)  # avoid 1/0 on pad rows
+    y = w1a8_matmul(
+        xq, w_packed, gamma_p, lam,
+        bm=bm, out_dtype=out_dtype, interpret=not on_tpu(),
+    )
+    return y[:m].reshape(*lead, -1)
+
+
+def int8_linear_infer(
+    x: Array, w_q: Array, wscale: Array, out_dtype=jnp.bfloat16
+) -> Array:
+    """Full W8A8 inference linear (8-bit branch)."""
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    xq, gamma = quantize_act_int8(xf)
+    bm = 8 if xq.shape[0] <= 128 else 128
+    xq, m = _pad_rows(xq, bm)
+    gamma_p, _ = _pad_rows(gamma + (gamma == 0), bm)
+    y = int8_matmul(
+        xq, w_q, gamma_p, wscale, bm=bm, out_dtype=out_dtype,
+        interpret=not on_tpu(),
+    )
+    return y[:m].reshape(*lead, -1)
+
+
+def fused_rmsnorm_quant(x: Array, scale: Array):
+    """(..., D) -> (int8 (..., D), gamma (...,))."""
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    bm = 8 if xf.shape[0] <= 256 else 256
+    xp, m = _pad_rows(xf, bm)
+    q, gamma = rmsnorm_quant(xp, scale, bm=bm, interpret=not on_tpu())
+    return q[:m].reshape(*lead, -1), gamma[:m].reshape(lead)
+
+
+def decoupled_first_gemm(
+    x: Array,
+    w1_packed: Array,
+    w8_q: Array,
+    lam: Array,
+    w8scale: Array,
+    alpha: Array,
+    beta: Array,
+    out_dtype=jnp.bfloat16,
+):
+    """Fused dual-branch up-projection for serving: reads activations once.
+
+    Returns (y1 (..., N), y8 (..., R)), each pre-scaled by beta / alpha.
+    """
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    xq, gamma = quantize_act_int8(xf)
+    bm = 8 if xq.shape[0] <= 128 else 128
+    xq, m = _pad_rows(xq, bm)
+    gamma_p, _ = _pad_rows(gamma + (gamma == 0), bm)
+    r = w8_q.shape[1]
+    bn = max(256, r)
+    y1, y8 = decoupled_matmul(
+        xq, w1_packed, w8_q, gamma_p, lam, w8scale, alpha, beta,
+        bm=bm, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+    )
+    return y1[:m].reshape(*lead, -1), y8[:m].reshape(*lead, -1)

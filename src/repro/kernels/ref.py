@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel.  Tests assert_allclose the
+kernels (interpret=True on CPU) against these across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def unpack_ref(packed: Array) -> Array:
+    """(K//8, N) uint8 -> (K, N) int8 in {-1, +1} (little-endian bits)."""
+    kb, n = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint8(1)
+    return (bits.astype(jnp.int8) * 2 - 1).reshape(kb * 8, n)
+
+
+def w1a8_matmul_ref(
+    x_i8: Array, w_packed: Array, gamma: Array, lam: Array, out_dtype=jnp.float32
+) -> Array:
+    """Y = (X_int8 @ unpack(W)) * lam / gamma   (paper Eq. 10).
+
+    x_i8: (M, K) int8 quantized activations; gamma: (M,) per-token scales;
+    w_packed: (K//8, N) uint8 sign bits; lam: scalar AbsMean.
+    """
+    w = unpack_ref(w_packed)
+    acc = jax.lax.dot_general(
+        x_i8, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    y = acc.astype(jnp.float32) * lam.astype(jnp.float32) / gamma[:, None].astype(
+        jnp.float32
+    )
+    return y.astype(out_dtype)
+
+
+def int8_matmul_ref(
+    x_i8: Array, w_i8: Array, gamma: Array, wscale: Array, out_dtype=jnp.float32
+) -> Array:
+    """Y = (X_int8 @ W_int8) / (gamma * wscale)   (W8A8 branch).
+
+    wscale: scalar AbsMax weight scale (q = w * wscale).
+    """
+    acc = jax.lax.dot_general(
+        x_i8, w_i8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    y = acc.astype(jnp.float32) / (
+        gamma[:, None].astype(jnp.float32) * wscale.astype(jnp.float32)
+    )
+    return y.astype(out_dtype)
+
+
+def rmsnorm_quant_ref(x: Array, scale: Array, eps: float = 1e-6):
+    """Fused RMSNorm + per-token AbsMax INT8 quantize (paper §A: 'RMSNorm
+    merged with activation quantization').
+
+    Returns (q (M, D) int8, gamma (M,) f32) with
+    q = RoundClip(rmsnorm(x) * gamma), gamma = 127 / max|rmsnorm(x)|.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)[None, :]
+    amax = jnp.max(jnp.abs(normed), axis=-1)
+    gamma = 127.0 / (amax + 1e-5)
+    q = jnp.clip(jnp.round(normed * gamma[:, None]), -127, 127).astype(jnp.int8)
+    return q, gamma
+
+
+def decoupled_matmul_ref(
+    x_i8: Array,
+    w1_packed: Array,
+    w8_i8: Array,
+    gamma: Array,
+    lam: Array,
+    w8scale: Array,
+    alpha: Array,
+    beta: Array,
+    out_dtype=jnp.float32,
+):
+    """Fused first GEMM of the decoupled FFN (paper §A third point): the
+    same INT8 activations multiply both branches in one pass.
+
+    Returns (y1 (M, N) = beta * W1A8 result, y8 (M, R) = alpha * W8A8 result).
+    """
+    y1 = w1a8_matmul_ref(x_i8, w1_packed, gamma, lam) * beta
+    y8 = int8_matmul_ref(x_i8, w8_i8, gamma, w8scale) * alpha
+    return y1.astype(out_dtype), y8.astype(out_dtype)

@@ -1,0 +1,105 @@
+"""W1A8 matmul Pallas kernel — the paper's inference hot spot, TPU-native.
+
+GPU/CPU papers (T-MAC, LUT-GEMM) turn 1-bit GEMV into table lookups; TPUs
+have no scalar LUT unit, so we adapt the *insight* (1-bit weights make the
+op bandwidth-bound -> shrink bytes moved): weights live in HBM bit-packed
+8-per-uint8 (16x smaller than bf16), each grid step streams a packed tile
+HBM->VMEM, unpacks to +-1 INT8 on the VPU (shift/mask), and feeds the MXU's
+int8 x int8 -> int32 path (2x the bf16 MACs/cycle on v5e).
+
+Epilogue folds the dequant scales lam (weight AbsMean) and gamma (per-token
+activation AbsMax) into the final tile write — no separate dequant pass
+touches HBM (paper §A scale folding).
+
+Grid: (M/bm, N/bn, K/bk) with a VMEM int32 accumulator; K is innermost so
+the accumulator stays resident until the (i, j) tile finishes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+# Default tile sizes: bm x bk int8 acts (32 KiB), bk//8 x bn packed weights
+# (8 KiB), bm x bn int32 accumulator (128 KiB) -> comfortably in 16 MiB VMEM
+# with double buffering.  bk is a multiple of 8 (packing) and 128 (MXU).
+DEFAULT_BM, DEFAULT_BK, DEFAULT_BN = 128, 256, 256
+
+
+def _unpack_tile(packed: Array) -> Array:
+    """(bk//8, bn) uint8 -> (bk, bn) int8 {-1, +1} (little-endian bits)."""
+    kb, bn = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint8(1)
+    return (bits.astype(jnp.int8) * 2 - 1).reshape(kb * 8, bn)
+
+
+def _w1a8_kernel(x_ref, wp_ref, gamma_ref, lam_ref, o_ref, acc_ref):
+    """One (i, j, k) grid step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_tile = _unpack_tile(wp_ref[...])  # VPU unpack in VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_tile,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,  # MXU int8 path
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        lam = lam_ref[0]
+        inv_gamma = 1.0 / gamma_ref[...]  # (bm,)
+        y = acc_ref[...].astype(jnp.float32) * (lam * inv_gamma)[:, None]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "out_dtype", "interpret"),
+)
+def w1a8_matmul(
+    x_i8: Array,
+    w_packed: Array,
+    gamma: Array,
+    lam: Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> Array:
+    """Y (M, N) = dequant(X_int8 (M, K) @ unpack(W_packed (K//8, N))).
+
+    Shapes must tile evenly (pad in ops.py for ragged cases).
+    """
+    m, k = x_i8.shape
+    kb, n = w_packed.shape
+    assert kb * 8 == k, f"packed K mismatch: {kb}*8 != {k}"
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm_ == 0 and k % bk_ == 0 and n % bn_ == 0, (m, k, n, bm_, bk_, bn_)
+
+    return pl.pallas_call(
+        _w1a8_kernel,
+        grid=(m // bm_, n // bn_, k // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_ // 8, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm_,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        interpret=interpret,
+    )(x_i8, w_packed, gamma.astype(jnp.float32), lam.reshape(1).astype(jnp.float32))

@@ -1,0 +1,31 @@
+"""Production meshes (assignment spec).
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — `pod` is pure
+data parallelism across the DCI; `data` doubles as the FSDP axis for
+parameters; `model` is tensor/expert parallelism.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over locally available devices (tests / CPU examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,91 @@
+"""Supervised training orchestrator — the fault-tolerance wrapper.
+
+At 1000+ nodes, worker failure is routine; the contract is: (1) training
+state is never lost (atomic async checkpoints), (2) a failed/preempted
+worker set restarts from the latest manifest with zero operator action,
+(3) stragglers are detected by heartbeat timeout and treated as failures.
+
+This module supervises a training subprocess per host:
+  * heartbeat file touched by the trainer every log interval;
+  * if the heartbeat goes stale (straggler/hang) the process is killed and
+    relaunched — it resumes from the last checkpoint;
+  * crash exit codes trigger the same restart path with backoff;
+  * a restart budget bounds flapping.
+
+Elastic scaling: because checkpoints store logical (unsharded) arrays with
+a structure manifest (repro.checkpoint), a restart may use a DIFFERENT
+process count / mesh — re-sharding happens at restore.  ``--grow`` /
+``--shrink`` simply change the flag set across restarts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import time
+
+
+def run_supervised(
+    cmd: list[str],
+    heartbeat_path: str,
+    heartbeat_timeout: float = 300.0,
+    max_restarts: int = 10,
+    backoff_s: float = 5.0,
+) -> int:
+    """Supervise ``cmd`` with heartbeat-based hang detection and restart."""
+    restarts = 0
+    while True:
+        if os.path.exists(heartbeat_path):
+            os.remove(heartbeat_path)
+        print(f"[orchestrator] launching (attempt {restarts + 1}): {' '.join(cmd)}")
+        proc = subprocess.Popen(cmd)
+        failed = False
+        while True:
+            try:
+                rc = proc.wait(timeout=10.0)
+                if rc == 0:
+                    print("[orchestrator] clean exit")
+                    return 0
+                print(f"[orchestrator] crashed rc={rc}")
+                failed = True
+                break
+            except subprocess.TimeoutExpired:
+                pass
+            # straggler / hang detection
+            if os.path.exists(heartbeat_path):
+                age = time.time() - os.path.getmtime(heartbeat_path)
+                if age > heartbeat_timeout:
+                    print(f"[orchestrator] heartbeat stale ({age:.0f}s) — "
+                          "treating as straggler, restarting")
+                    proc.send_signal(signal.SIGKILL)
+                    proc.wait()
+                    failed = True
+                    break
+        if failed:
+            restarts += 1
+            if restarts > max_restarts:
+                print("[orchestrator] restart budget exhausted")
+                return 1
+            time.sleep(backoff_s * min(restarts, 5))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--heartbeat", default="/tmp/repro_heartbeat")
+    ap.add_argument("--heartbeat-timeout", type=float, default=300.0)
+    ap.add_argument("--max-restarts", type=int, default=10)
+    ap.add_argument("cmd", nargs=argparse.REMAINDER,
+                    help="training command (e.g. python -m repro.launch.train ...)")
+    args = ap.parse_args()
+    cmd = args.cmd[1:] if args.cmd and args.cmd[0] == "--" else args.cmd
+    sys.exit(
+        run_supervised(cmd, args.heartbeat, args.heartbeat_timeout,
+                       args.max_restarts)
+    )
+
+
+if __name__ == "__main__":
+    main()

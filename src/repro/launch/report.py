@@ -1,0 +1,58 @@
+"""Render dry-run / roofline JSON artifacts into the EXPERIMENTS.md tables."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 2**30:
+        return f"{b/2**30:.2f}G"
+    if b >= 2**20:
+        return f"{b/2**20:.1f}M"
+    return f"{b/2**10:.0f}K"
+
+
+def roofline_table(path: str) -> str:
+    recs = [r for r in json.load(open(path)) if "error" not in r]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL_FLOPS | useful-FLOPs | peak GiB/dev | bound step s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['bottleneck']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['memory']['peak_bytes']/2**30:.2f} | "
+            f"{r['step_time_lower_bound_s']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(path: str) -> str:
+    recs = [r for r in json.load(open(path)) if "error" not in r]
+    lines = [
+        "| arch | shape | mesh | compile s | HLO FLOPs/dev | peak GiB/dev | "
+        "AG | AR | RS | A2A/CP |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        c = r["collective_bytes_per_device"]
+        a2a = c.get("all-to-all", 0) + c.get("collective-permute", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} | "
+            f"{r['flops_total']:.2e} | {r['memory']['peak_bytes']/2**30:.2f} | "
+            f"{fmt_bytes(c.get('all-gather', 0))} | "
+            f"{fmt_bytes(c.get('all-reduce', 0))} | "
+            f"{fmt_bytes(c.get('reduce-scatter', 0))} | {fmt_bytes(a2a)} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    kind, path = sys.argv[1], sys.argv[2]
+    print(roofline_table(path) if kind == "roofline" else dryrun_table(path))

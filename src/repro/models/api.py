@@ -1,0 +1,149 @@
+"""Family-dispatching model API + dry-run input specs.
+
+Every architecture family exposes the same five entry points used by the
+trainer / server / dry-run:
+
+    init_model(key, cfg)                          -> (params, axes)
+    loss_fn(params, batch, cfg)                   -> (loss, metrics)
+    forward(params, batch, cfg)                   -> (logits, aux)
+    prefill(params, batch, cfg, cache_len)        -> (logits_last, caches)
+    decode_step(params, tokens, caches, pos, cfg) -> (logits, caches)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a benchmark cell (weak-type-correct, shardable, zero
+allocation) plus their logical axes — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+Array = jax.Array
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def init_model(key, cfg: ModelConfig):
+    return _mod(cfg).init_model(key, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    return _mod(cfg).forward(params, batch, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return _mod(cfg).lm_loss(params, batch, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    return _mod(cfg).prefill(params, batch, cfg, cache_len)
+
+
+def decode_step(params, tokens, caches, pos, cfg: ModelConfig):
+    return _mod(cfg).decode_step(params, tokens, caches, pos, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def params_shape_and_axes(cfg: ModelConfig):
+    """ShapeDtypeStructs for params plus the logical-axes tree."""
+    axes_box = {}
+
+    def only_params(key):
+        p, a = init_model(key, cfg)
+        axes_box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    return shapes, axes_box["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[dict, dict]:
+    """(specs, logical_axes) for one benchmark cell.
+
+    train:   full batch with labels.
+    prefill: prompt batch (no labels).
+    decode:  one new token + KV caches at seq_len + scalar position.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    batch_ax = ("batch", None)
+
+    if cfg.family == "encdec":
+        f = cfg.n_frontend_tokens
+        if shape.kind in ("train", "prefill"):
+            specs: dict[str, Any] = {
+                "frames": sds((b, f, cfg.d_model), bf16),
+                "tokens": sds((b, s), i32),
+            }
+            axes: dict[str, Any] = {
+                "frames": ("batch", None, "act_embed"),
+                "tokens": batch_ax,
+            }
+            if shape.kind == "train":
+                specs["labels"] = sds((b, s), i32)
+                axes["labels"] = batch_ax
+            return specs, axes
+        # decode
+        cache, cache_axes = jax.eval_shape(
+            lambda: init_cache(cfg, b, s, bf16)[0]
+        ), init_cache_axes(cfg, b, s)
+        return (
+            {"tokens": sds((b, 1), i32), "caches": cache,
+             "pos": sds((), i32)},
+            {"tokens": batch_ax, "caches": cache_axes, "pos": ()},
+        )
+
+    n_img = cfg.n_image_tokens
+    if shape.kind in ("train", "prefill"):
+        s_text = s - n_img if n_img else s
+        specs = {"tokens": sds((b, s_text), i32)}
+        axes = {"tokens": batch_ax}
+        if n_img:
+            specs["image_embeds"] = sds((b, n_img, cfg.d_model), bf16)
+            axes["image_embeds"] = ("batch", None, "act_embed")
+        if shape.kind == "train":
+            specs["labels"] = sds((b, s_text), i32)
+            axes["labels"] = batch_ax
+        return specs, axes
+
+    # decode: caches at length s
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, b, s, bf16)[0])
+    cache_axes = init_cache_axes(cfg, b, s)
+    return (
+        {"tokens": sds((b, 1), i32), "caches": cache_shapes, "pos": sds((), i32)},
+        {"tokens": batch_ax, "caches": cache_axes, "pos": ()},
+    )
+
+
+def init_cache_axes(cfg: ModelConfig, batch: int, max_len: int):
+    """Logical axes of the cache pytree (no allocation; init_cache returns
+    (cache, axes) and axes is plain python)."""
+    box = {}
+
+    def f():
+        c, a = init_cache(cfg, batch, max_len, jnp.bfloat16)
+        box["a"] = a
+        return c
+
+    jax.eval_shape(f)
+    return box["a"]

@@ -1,0 +1,388 @@
+"""Attention variants: GQA/MQA with optional sliding window, DeepSeek-V2 MLA,
+and cross-attention (Whisper).  All projections are BitLinear (pure 1-bit,
+paper §3.1) in quantized modes.
+
+Cache protocol (decode): each layer owns a dict of ring-buffer arrays plus
+the model-level integer ``pos`` (same for all layers).  ``*_prefill`` fills
+the cache from a full sequence; ``*_decode`` consumes/extends it by one
+token.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.bitlinear import bitlinear, init_linear, init_rmsnorm, rmsnorm
+from repro.distributed.sharding import shard_hint
+from repro.models.layers import apply_rope, rope_table
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: Array, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    params, axes = {}, {}
+    for name, k, di, do, ax in (
+        ("wq", ks[0], d, nq * hd, ("embed", "heads")),
+        ("wk", ks[1], d, nkv * hd, ("embed", "kv_heads")),
+        ("wv", ks[2], d, nkv * hd, ("embed", "kv_heads")),
+        ("wo", ks[3], nq * hd, d, ("heads", "embed")),
+    ):
+        p, a = init_linear(k, di, do, ax)
+        params[name], axes[name] = p, a
+    if cfg.quant.mode != "none":
+        # SubLN ahead of the output projection (BitNet placement)
+        p, a = init_rmsnorm(nq * hd, axis="heads")
+        params["subln"], axes["subln"] = p, a
+    return params, axes
+
+
+def _project_qkv(params, x: Array, cfg: ModelConfig):
+    b, s, d = x.shape
+    hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = bitlinear(params["wq"], x, cfg.quant, waxes=("embed", "heads")).reshape(b, s, nq, hd)
+    k = bitlinear(params["wk"], x, cfg.quant, waxes=("embed", "kv_heads")).reshape(b, s, nkv, hd)
+    v = bitlinear(params["wv"], x, cfg.quant, waxes=("embed", "kv_heads")).reshape(b, s, nkv, hd)
+    q = shard_hint(q, "batch", "seq", "act_heads", None)
+    k = shard_hint(k, "batch", "seq", "cache_heads", None)
+    v = shard_hint(v, "batch", "seq", "cache_heads", None)
+    return q, k, v
+
+
+def _out_proj(params, attn_out: Array, cfg: ModelConfig) -> Array:
+    b, s = attn_out.shape[:2]
+    flat = attn_out.reshape(b, s, -1)
+    # keep heads*head_dim model-sharded through SubLN + act-quant (see the
+    # sharding note in core/decoupled._branch1_apply)
+    flat = shard_hint(flat, "batch", "seq", "act_heads")
+    subln = params.get("subln")
+    return bitlinear(
+        params["wo"], flat, cfg.quant, sublayer_norm=subln, waxes=("heads", "embed")
+    )
+
+
+def _sdpa(
+    q: Array,
+    k: Array,
+    v: Array,
+    mask: Optional[Array],
+    scale: Optional[float] = None,
+) -> Array:
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    mask: broadcastable to (B, Hq, Sq, Skv); True = attend.
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA)
+    g = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+    # logits: (B, Hkv, G, Sq, Skv)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        # mask arrives as (B|1, 1, Sq, Skv); add the group axis
+        logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, sq, hq, dv)
+
+
+def causal_mask(sq: int, skv: int, window) -> Array:
+    """(1, 1, Sq, Skv) boolean mask; ``window`` may be a traced scalar
+    (<= 0 means unlimited / global)."""
+    i = jnp.arange(sq)[:, None] + (skv - sq)  # absolute query positions
+    j = jnp.arange(skv)[None, :]
+    m = j <= i
+    w = jnp.asarray(window)
+    m = m & jnp.where(w > 0, (i - j) < w, True)
+    return m[None, None]
+
+
+def attention(
+    params,
+    x: Array,
+    cfg: ModelConfig,
+    sin: Array,
+    cos: Array,
+    window=0,
+    causal: bool = True,
+    cache_len: Optional[int] = None,
+):
+    """Full-sequence attention (train / prefill).
+
+    With ``cache_len`` set, also returns a KV cache buffer of that length
+    with positions [0:S] filled (prefill).
+    """
+    q, k, v = _project_qkv(params, x, cfg)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    s = x.shape[1]
+    mask = causal_mask(s, s, window) if causal else None
+    out = _sdpa(q, k, v, mask)
+    y = _out_proj(params, out, cfg)
+    if cache_len is None:
+        return y
+    if cache_len >= s:
+        pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+        cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    else:
+        # RING cache (sliding-window layer): keep the last cache_len
+        # positions, placed so that slot(p) == p % cache_len — decode then
+        # overwrites the oldest entry in place.
+        shift = s % cache_len
+        cache = {
+            "k": jnp.roll(k[:, s - cache_len :], shift, axis=1),
+            "v": jnp.roll(v[:, s - cache_len :], shift, axis=1),
+        }
+    cache["k"] = shard_hint(cache["k"], "batch", "cache_seq", "cache_heads", None)
+    cache["v"] = shard_hint(cache["v"], "batch", "cache_seq", "cache_heads", None)
+    return y, cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    shape = (batch, max_len, nkv, hd)
+    zeros = jnp.zeros(shape, dtype)
+    cache = {"k": zeros, "v": zeros}
+    axes = {
+        "k": ("batch", "cache_seq", "cache_heads", None),
+        "v": ("batch", "cache_seq", "cache_heads", None),
+    }
+    return cache, axes
+
+
+def attention_decode(
+    params,
+    x: Array,
+    cache: dict,
+    pos: Array,
+    cfg: ModelConfig,
+    theta: float,
+    window=0,
+):
+    """One-token decode step. x: (B, 1, D); pos: scalar int (current index).
+
+    The cache may be shorter than the sequence (RING cache for
+    sliding-window layers): the write slot is ``pos % cache_len`` and the
+    validity mask covers min(pos+1, cache_len) slots — a cache of length W
+    IS the W-token sliding window, so no extra window masking is needed.
+
+    Returns (y, new_cache).
+    """
+    b = x.shape[0]
+    del window  # window semantics are carried by the cache length (ring)
+    q, k, v = _project_qkv(params, x, cfg)
+    if cfg.pos_embedding == "rope":
+        sin, cos = rope_table(pos[None], cfg.head_dim, theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    skv = cache["k"].shape[1]
+    slot = pos % skv
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+    )
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+    )
+    new_k = shard_hint(new_k, "batch", "cache_seq", "cache_heads", None)
+    new_v = shard_hint(new_v, "batch", "cache_seq", "cache_heads", None)
+    j = jnp.arange(skv)[None, :]
+    m = j <= jnp.minimum(pos, skv - 1)
+    mask = jnp.broadcast_to(m[None, None], (1, 1, 1, skv))
+    out = _sdpa(q, new_k.astype(q.dtype), new_v.astype(q.dtype), mask)
+    return _out_proj(params, out, cfg), {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (Whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(params, x: Array, k: Array, v: Array, cfg: ModelConfig) -> Array:
+    """x: (B, Sq, D) queries; k/v precomputed from encoder memory."""
+    b, sq, _ = x.shape
+    hd, nq = cfg.head_dim, cfg.n_heads
+    q = bitlinear(params["wq"], x, cfg.quant).reshape(b, sq, nq, hd)
+    out = _sdpa(q, k, v, None)
+    return _out_proj(params, out, cfg)
+
+
+def cross_kv(params, memory: Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (once per request)."""
+    b, sm, _ = memory.shape
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    k = bitlinear(params["wk"], memory, cfg.quant).reshape(b, sm, nkv, hd)
+    v = bitlinear(params["wv"], memory, cfg.quant).reshape(b, sm, nkv, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key: Array, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    params, axes = {}, {}
+
+    def add(name, k, di, do, ax):
+        p, a = init_linear(k, di, do, ax)
+        params[name], axes[name] = p, a
+
+    if cfg.q_lora_rank > 0:
+        add("wq_down", ks[0], d, cfg.q_lora_rank, ("embed", "lora"))
+        add("wq_up", ks[1], cfg.q_lora_rank, nh * qk, ("lora", "heads"))
+        p, a = init_rmsnorm(cfg.q_lora_rank, axis="lora")
+        params["q_norm"], axes["q_norm"] = p, a
+    else:
+        add("wq", ks[0], d, nh * qk, ("embed", "heads"))
+    # joint KV down-projection: [c_kv ; k_rope]
+    add("wkv_down", ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, ("embed", "lora"))
+    add(
+        "wkv_up",
+        ks[3],
+        cfg.kv_lora_rank,
+        nh * (cfg.qk_nope_dim + cfg.v_head_dim),
+        ("lora", "heads"),
+    )
+    p, a = init_rmsnorm(cfg.kv_lora_rank, axis="lora")
+    params["kv_norm"], axes["kv_norm"] = p, a
+    add("wo", ks[4], nh * cfg.v_head_dim, d, ("heads", "embed"))
+    if cfg.quant.mode != "none":
+        p, a = init_rmsnorm(nh * cfg.v_head_dim, axis="heads")
+        params["subln"], axes["subln"] = p, a
+    return params, axes
+
+
+def _mla_q(params, x: Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    nh, qk = cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank > 0:
+        cq = bitlinear(params["wq_down"], x, cfg.quant)
+        cq = rmsnorm(params["q_norm"], cq)
+        q = bitlinear(params["wq_up"], cq, cfg.quant)
+    else:
+        q = bitlinear(params["wq"], x, cfg.quant)
+    q = q.reshape(b, s, nh, qk)
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+
+
+def _mla_expand_kv(params, ckv: Array, cfg: ModelConfig):
+    """Expand compressed latent into per-head K_nope and V."""
+    b, s, _ = ckv.shape
+    nh = cfg.n_heads
+    kv = bitlinear(params["wkv_up"], ckv, cfg.quant)
+    kv = kv.reshape(b, s, nh, cfg.qk_nope_dim + cfg.v_head_dim)
+    return kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim :]
+
+
+def mla_attention(
+    params,
+    x: Array,
+    cfg: ModelConfig,
+    positions: Array,
+    cache_len: Optional[int] = None,
+):
+    """Full-sequence MLA (train / prefill)."""
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, x, cfg)
+
+    down = bitlinear(params["wkv_down"], x, cfg.quant)
+    ckv, k_rope = down[..., : cfg.kv_lora_rank], down[..., cfg.kv_lora_rank :]
+    ckv = rmsnorm(params["kv_norm"], ckv)
+    k_nope, v = _mla_expand_kv(params, ckv, cfg)
+
+    sin, cos = rope_table(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)  # single shared head
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, nh, cfg.qk_rope_dim))], axis=-1
+    )
+    mask = causal_mask(s, s, 0)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    out = _sdpa(q, k, v, mask, scale=scale)
+    subln = params.get("subln")
+    y = bitlinear(params["wo"], out.reshape(b, s, -1), cfg.quant, sublayer_norm=subln)
+    if cache_len is None:
+        return y
+    pad = [(0, 0), (0, cache_len - s), (0, 0)]
+    cache = {
+        "ckv": jnp.pad(ckv, pad),
+        "krope": jnp.pad(k_rope[:, :, 0], pad),
+    }
+    return y, cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """MLA caches only the compressed latent + shared rope key — this is the
+    architecture's memory win and must be preserved (not expanded K/V)."""
+    cache = {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+    axes = {
+        "ckv": ("batch", "cache_seq", None),
+        "krope": ("batch", "cache_seq", None),
+    }
+    return cache, axes
+
+
+def mla_decode(params, x: Array, cache: dict, pos: Array, cfg: ModelConfig):
+    b = x.shape[0]
+    nh = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, x, cfg)
+    down = bitlinear(params["wkv_down"], x, cfg.quant)
+    ckv_new = rmsnorm(params["kv_norm"], down[..., : cfg.kv_lora_rank])
+    krope_new = down[..., cfg.kv_lora_rank :]
+    sin, cos = rope_table(pos[None], cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    krope_new = apply_rope(krope_new[:, :, None, :], sin, cos)[:, :, 0]
+
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1
+    )
+    new_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), pos, axis=1
+    )
+    skv = new_ckv.shape[1]
+    # expand the whole latent cache for scoring (weight-absorption variant is
+    # a serving optimisation tracked in EXPERIMENTS.md §Perf)
+    k_nope, v = _mla_expand_kv(params, new_ckv.astype(x.dtype), cfg)
+    k = jnp.concatenate(
+        [
+            k_nope,
+            jnp.broadcast_to(
+                new_krope.astype(x.dtype)[:, :, None, :], (b, skv, nh, cfg.qk_rope_dim)
+            ),
+        ],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask = (jnp.arange(skv)[None, :] <= pos)[None, None]
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    out = _sdpa(q, k, v, mask, scale=scale)
+    subln = params.get("subln")
+    y = bitlinear(params["wo"], out.reshape(b, 1, -1), cfg.quant, sublayer_norm=subln)
+    return y, {"ckv": new_ckv, "krope": new_krope}

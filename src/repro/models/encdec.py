@@ -1,0 +1,269 @@
+"""Whisper-style encoder-decoder backbone.
+
+Assignment rules: the conv/mel frontend is a STUB — ``input_specs`` supplies
+precomputed frame embeddings (B, n_frames, d_model).  Everything downstream
+(sinusoidal encoder positions, bidirectional encoder, causal decoder with
+cross-attention, learned decoder positions) is real and pQuant-quantized
+(self/cross attention 1-bit, FFNs decoupled).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    apply_ffn,
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_ffn,
+    init_learned_pos,
+    init_rmsnorm,
+    rmsnorm,
+    unembed,
+)
+
+Array = jax.Array
+
+
+def sinusoid_table(length: int, d_model: int) -> Array:
+    """Whisper's fixed sinusoidal positions for the encoder."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    angles = jnp.arange(length)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _scan_or_unroll(body, carry, xs, cfg: ModelConfig, length: int):
+    """lax.scan when cfg.scan_layers else an unrolled python loop (used by
+    roofline calibration for exact per-layer cost accounting)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for r in range(length):
+        x_r = jax.tree.map(lambda t: t[r], xs)
+        carry, y = body(carry, x_r)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, None
+
+
+def _stack_axes(axes):
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a), axes, is_leaf=lambda t: isinstance(t, tuple)
+    )
+
+
+def _init_enc_layer(key: Array, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["pre_norm"], a["pre_norm"] = init_rmsnorm(cfg.d_model, axis="act_embed")
+    p["attn"], a["attn"] = attn_mod.init_attention(ks[0], cfg)
+    p["ffn_norm"], a["ffn_norm"] = init_rmsnorm(cfg.d_model, axis="act_embed")
+    p["ffn"], a["ffn"] = init_ffn(ks[1], cfg)
+    return p, a
+
+
+def _init_dec_layer(key: Array, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["pre_norm"], a["pre_norm"] = init_rmsnorm(cfg.d_model, axis="act_embed")
+    p["self_attn"], a["self_attn"] = attn_mod.init_attention(ks[0], cfg)
+    p["cross_norm"], a["cross_norm"] = init_rmsnorm(cfg.d_model, axis="act_embed")
+    p["cross_attn"], a["cross_attn"] = attn_mod.init_attention(ks[1], cfg)
+    p["ffn_norm"], a["ffn_norm"] = init_rmsnorm(cfg.d_model, axis="act_embed")
+    p["ffn"], a["ffn"] = init_ffn(ks[2], cfg)
+    return p, a
+
+
+def init_model(key: Array, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+
+    params["embed"], axes["embed"] = init_embedding(ks[0], cfg.vocab_size, cfg.d_model)
+    params["dec_pos"], axes["dec_pos"] = init_learned_pos(
+        ks[1], cfg.max_seq_len, cfg.d_model
+    )
+
+    enc = [_init_enc_layer(jax.random.fold_in(ks[2], i), cfg)
+           for i in range(cfg.n_enc_layers)]
+    params["encoder"] = _stack_trees([e[0] for e in enc])
+    axes["encoder"] = _stack_axes(enc[0][1])
+
+    dec = [_init_dec_layer(jax.random.fold_in(ks[3], i), cfg)
+           for i in range(cfg.n_layers)]
+    params["decoder"] = _stack_trees([d[0] for d in dec])
+    axes["decoder"] = _stack_axes(dec[0][1])
+
+    params["enc_final_norm"], axes["enc_final_norm"] = init_rmsnorm(
+        cfg.d_model, axis="act_embed"
+    )
+    params["final_norm"], axes["final_norm"] = init_rmsnorm(
+        cfg.d_model, axis="act_embed"
+    )
+    return params, axes
+
+
+def encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """frames: precomputed (stub) frame embeddings (B, F, D)."""
+    x = frames + sinusoid_table(frames.shape[1], cfg.d_model).astype(frames.dtype)[None]
+    x = shard_hint(x, "batch", "seq", "act_embed")
+    dummy = jnp.zeros((frames.shape[1], cfg.head_dim // 2), jnp.float32)
+
+    def body(x, lp):
+        h = rmsnorm(lp["pre_norm"], x)
+        y = attn_mod.attention(lp["attn"], h, cfg, dummy, dummy, causal=False)
+        x = x + y
+        h = rmsnorm(lp["ffn_norm"], x)
+        y, _ = apply_ffn(lp["ffn"], h, cfg)
+        x = x + y
+        return shard_hint(x, "batch", "seq", "act_embed"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = _scan_or_unroll(body, x, params["encoder"], cfg, cfg.n_enc_layers)
+    return rmsnorm(params["enc_final_norm"], x)
+
+
+def _dec_layer_apply(lp, x, memory, cfg: ModelConfig, cache_len=None):
+    dummy = jnp.zeros((x.shape[1], cfg.head_dim // 2), jnp.float32)
+    h = rmsnorm(lp["pre_norm"], x)
+    out = attn_mod.attention(
+        lp["self_attn"], h, cfg, dummy, dummy, causal=True, cache_len=cache_len
+    )
+    y, self_cache = (out if cache_len else (out, None))
+    x = x + y
+    h = rmsnorm(lp["cross_norm"], x)
+    ck, cv = attn_mod.cross_kv(lp["cross_attn"], memory, cfg)
+    x = x + attn_mod.cross_attention(lp["cross_attn"], h, ck, cv, cfg)
+    h = rmsnorm(lp["ffn_norm"], x)
+    y, aux = apply_ffn(lp["ffn"], h, cfg)
+    x = x + y
+    x = shard_hint(x, "batch", "seq", "act_embed")
+    cache = {"self": self_cache, "cross_k": ck, "cross_v": cv} if cache_len else None
+    return x, aux, cache
+
+
+def forward(params, batch: dict, cfg: ModelConfig):
+    """batch: {"frames": (B,F,D), "tokens": (B,S)}.
+    Returns (logits (B,S,V), aux)."""
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, cfg)
+    # input frames may arrive f32; keep the decoder carry dtype-stable
+    memory = memory.astype(x.dtype)
+    x = x + params["dec_pos"]["pos"][: tokens.shape[1]].astype(x.dtype)[None]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def body(carry, lp):
+        x, aux_acc = carry
+        x, aux, _ = _dec_layer_apply(lp, x, memory, cfg)
+        return (x, aux_acc + aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux_total), _ = _scan_or_unroll(
+        body, (x, aux_total), params["decoder"], cfg, cfg.n_layers
+    )
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], x, cfg)
+    logits = shard_hint(logits, "batch", "seq", "vocab")
+    return logits, aux_total
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig):
+    logits, aux = forward(params, batch, cfg)
+    loss, nll = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss + aux.astype(loss.dtype), {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with self-attn KV cache and cached cross K/V
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
+    """Encode audio, run the decoder prompt, fill caches."""
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, cfg)
+    memory = memory.astype(x.dtype)
+    x = x + params["dec_pos"]["pos"][: tokens.shape[1]].astype(x.dtype)[None]
+
+    def body(x, lp):
+        x, _, cache = _dec_layer_apply(lp, x, memory, cfg, cache_len=cache_len)
+        return x, cache
+
+    x, caches = _scan_or_unroll(body, x, params["decoder"], cfg, cfg.n_layers)
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    logits = unembed(params["embed"], x, cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig):
+    """tokens (B,1). caches from :func:`prefill` (stacked over layers)."""
+    x = embed(params["embed"], tokens, cfg)
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"]["pos"], pos, 1, axis=0
+    )
+    x = x + pos_emb.astype(x.dtype)[None]
+
+    def body(x, inp):
+        lp, cache = inp
+        h = rmsnorm(lp["pre_norm"], x)
+        y, new_self = attn_mod.attention_decode(
+            lp["self_attn"], h, cache["self"], pos, cfg, cfg.rope_theta
+        )
+        x = x + y
+        h = rmsnorm(lp["cross_norm"], x)
+        x = x + attn_mod.cross_attention(
+            lp["cross_attn"], h, cache["cross_k"], cache["cross_v"], cfg
+        )
+        h = rmsnorm(lp["ffn_norm"], x)
+        y, _ = apply_ffn(lp["ffn"], h, cfg)
+        x = x + y
+        new_cache = {
+            "self": new_self,
+            "cross_k": cache["cross_k"],
+            "cross_v": cache["cross_v"],
+        }
+        return x, new_cache
+
+    x, new_caches = _scan_or_unroll(
+        body, x, (params["decoder"], caches), cfg, cfg.n_layers
+    )
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decoder cache stand-in (for dry-run input_specs): stacked over layers."""
+    c, a = attn_mod.init_attention_cache(cfg, batch, max_len, dtype)
+    f = cfg.n_frontend_tokens
+    cross = jnp.zeros((batch, f, cfg.n_kv_heads, cfg.head_dim), dtype)
+    cache = {
+        "self": jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (cfg.n_layers,) + t.shape), c
+        ),
+        "cross_k": jnp.broadcast_to(cross[None], (cfg.n_layers,) + cross.shape),
+        "cross_v": jnp.broadcast_to(cross[None], (cfg.n_layers,) + cross.shape),
+    }
+    axes = {
+        "self": _stack_axes(a),
+        "cross_k": ("layers", "batch", None, "cache_heads", None),
+        "cross_v": ("layers", "batch", None, "cache_heads", None),
+    }
+    return cache, axes

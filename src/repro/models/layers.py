@@ -1,0 +1,134 @@
+"""Shared model layers: embeddings, rotary tables, FFN block dispatch.
+
+The FFN block is where pQuant's decoupled linear layer plugs in: mode
+``pquant`` builds the dual-branch layer (1-bit + r-wide 8-bit experts),
+``bitnet``/``bitnet158`` build a fully quantized FFN (r=0), ``none`` a
+plain dense GLU/MLP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.bitlinear import init_rmsnorm, rmsnorm  # noqa: F401  (re-export)
+from repro.core.decoupled import decoupled_ffn, init_decoupled_ffn
+from repro.core.routing import RouterConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key: Array, vocab: int, d_model: int, dtype=jnp.float32):
+    e = jax.random.normal(key, (vocab, d_model), dtype) * (d_model**-0.5)
+    return {"table": e}, {"table": ("vocab", "embed")}
+
+
+def embed(params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    # gemma-family scales embeddings by sqrt(d_model)
+    if "gemma" in cfg.name:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def unembed(params, x: Array, cfg: ModelConfig) -> Array:
+    logits = x @ params["table"].T.astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        c = jnp.asarray(cfg.logit_softcap, logits.dtype)
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def init_learned_pos(key: Array, max_len: int, d_model: int, dtype=jnp.float32):
+    p = jax.random.normal(key, (max_len, d_model), dtype) * 0.02
+    return {"pos": p}, {"pos": (None, "embed")}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """sin/cos tables for given integer positions: (len(positions), head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array) -> Array:
+    """x: (B, S, H, D). sin/cos: (S, D/2). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[None, :, None, :].astype(x.dtype)
+    cos = cos[None, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# FFN block (dense / fully quantized / pQuant-decoupled)
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key: Array, cfg: ModelConfig, d_ff: int | None = None):
+    """FFN parameters for one layer, respecting cfg.quant.
+
+    pquant mode: d_ff is the 1-bit width, quant.r the 8-bit branch width
+    (paper Table 1).  Other modes: r = 0.
+    """
+    q = cfg.quant
+    width = cfg.d_ff if d_ff is None else d_ff
+    r = q.r if q.mode == "pquant" else 0
+    n = q.num_experts if q.mode == "pquant" else 1
+    return init_decoupled_ffn(
+        key,
+        cfg.d_model,
+        width,
+        r,
+        num_experts=n,
+        glu=cfg.glu,
+        alpha_init=q.alpha_init,
+        beta_init=q.beta_init,
+    )
+
+
+def apply_ffn(params, x: Array, cfg: ModelConfig):
+    """Returns (y, aux_loss)."""
+    q = cfg.quant
+    rcfg = None
+    if q.mode == "pquant" and q.num_experts > 1:
+        rcfg = RouterConfig(num_experts=q.num_experts, top_k=1)
+    return decoupled_ffn(
+        params, x, q, glu=cfg.glu, activation=cfg.activation, router_cfg=rcfg
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_loss(
+    logits: Array, labels: Array, mask: Array | None = None, z_weight: float = 1e-4
+):
+    """Token-level CE with z-loss, fp32 accumulation.
+
+    logits (B, S, V), labels (B, S) int32; mask (B, S) in {0,1}.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - true_logit
+    z = z_weight * jnp.square(lse)
+    per_tok = nll + z
+    if mask is None:
+        return jnp.mean(per_tok), jnp.mean(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_tok * mask) / denom, jnp.sum(nll * mask) / denom

@@ -1,0 +1,153 @@
+"""DeepSeekMoE-style mixture-of-experts FFN (shared + routed experts).
+
+Composition with pQuant (DESIGN.md §5): in ``pquant`` mode the routed
+experts' FFNs are 1-bit (they are the capacity pool) while the *shared*
+experts — always active, analogous to pQuant's own shared 1-bit branch —
+carry the decoupled 8-bit branch that preserves sensitive parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import routing
+from repro.core.decoupled import ACTIVATIONS
+from repro.core.quantization import (
+    QuantConfig,
+    fake_quant_stacked,
+    maybe_quant_acts,
+)
+from repro.core.routing import RouterConfig
+from repro.distributed.sharding import shard_hint
+from repro.models.layers import apply_ffn, init_ffn
+
+Array = jax.Array
+
+
+def init_moe_ffn(key: Array, cfg: ModelConfig):
+    """Parameters for one MoE FFN layer."""
+    d = cfg.d_model
+    e = cfg.n_routed_experts
+    de = cfg.d_ff_expert
+    ks = jax.random.split(key, 6)
+    params, axes = {}, {}
+
+    s_in = d**-0.5
+    shapes = [("we_up", (e, d, de), ("experts", "embed", "expert_ffn"))]
+    if cfg.glu:
+        shapes.append(("we_gate", (e, d, de), ("experts", "embed", "expert_ffn")))
+    shapes.append(("we_down", (e, de, d), ("experts", "expert_ffn", "embed")))
+    for i, (name, shp, ax) in enumerate(shapes):
+        scale = s_in if shp[1] == d else de**-0.5
+        params[name] = (
+            jax.random.truncated_normal(ks[i], -3, 3, shp, jnp.float32) * scale
+        )
+        axes[name] = ax
+
+    rp, ra = routing.init_router(
+        ks[3], d, RouterConfig(num_experts=e, top_k=cfg.moe_top_k)
+    )
+    params["router"], axes["router"] = rp, ra
+
+    if cfg.n_shared_experts > 0:
+        # shared experts fused into one FFN of width s*d_ff_expert; in pquant
+        # mode this FFN carries the decoupled 8-bit branch (see DESIGN.md §5)
+        sp, sa = init_ffn(ks[4], cfg, d_ff=cfg.n_shared_experts * de)
+        params["shared"], axes["shared"] = sp, sa
+    return params, axes
+
+
+def _expert_wq(qcfg: QuantConfig, dtype):
+    """Per-expert weight quantizer; with qgather enabled the FSDP gather
+    moves INT8 signs (EXPERIMENTS.md §Perf, Cell C follow-up)."""
+    if qcfg.qgather and qcfg.mode in ("bitnet", "pquant"):
+        from repro.distributed.qgather import binarize_gather_stacked
+
+        def wq(w, axes=("experts", "embed", "expert_ffn")):
+            if isinstance(w, dict):
+                return fake_quant_stacked(w, qcfg).astype(dtype)
+            return binarize_gather_stacked(w, axes).astype(dtype)
+
+        return wq
+    return lambda w, axes=None: fake_quant_stacked(w, qcfg).astype(dtype)
+
+
+def _experts_apply(params, xe: Array, cfg: ModelConfig, qcfg: QuantConfig) -> Array:
+    """Batched expert FFN: xe (E, C, D) -> (E, C, D), per-expert quantized."""
+    act = ACTIVATIONS[cfg.activation]
+    wq = _expert_wq(qcfg, xe.dtype)
+    xq = maybe_quant_acts(xe, qcfg)
+    up = jnp.einsum("ecd,edf->ecf", xq, wq(params["we_up"]))
+    if cfg.glu:
+        h = act(jnp.einsum("ecd,edf->ecf", xq, wq(params["we_gate"]))) * up
+    else:
+        h = act(up)
+    hq = maybe_quant_acts(h, qcfg)
+    return jnp.einsum(
+        "ecf,efd->ecd", hq,
+        wq(params["we_down"], ("experts", "expert_ffn", "embed")),
+    )
+
+
+def _experts_apply_grouped(params, xe: Array, cfg: ModelConfig, qcfg) -> Array:
+    """Batched expert FFN for einsum dispatch: (G, E, C, D) -> (G, E, C, D)."""
+    act = ACTIVATIONS[cfg.activation]
+    wq = _expert_wq(qcfg, xe.dtype)
+    xq = maybe_quant_acts(xe, qcfg)
+    up = jnp.einsum("gecd,edf->gecf", xq, wq(params["we_up"]))
+    if cfg.glu:
+        h = act(jnp.einsum("gecd,edf->gecf", xq, wq(params["we_gate"]))) * up
+    else:
+        h = act(up)
+    hq = maybe_quant_acts(h, qcfg)
+    return jnp.einsum(
+        "gecf,efd->gecd", hq,
+        wq(params["we_down"], ("experts", "expert_ffn", "embed")),
+    )
+
+
+def moe_ffn(params, x: Array, cfg: ModelConfig):
+    """Apply MoE FFN over (..., D). Returns (y, aux_loss)."""
+    lead, d = x.shape[:-1], x.shape[-1]
+    xf = x.reshape(-1, d)
+    rcfg = RouterConfig(
+        num_experts=cfg.n_routed_experts,
+        top_k=cfg.moe_top_k,
+        capacity_factor=cfg.moe_capacity_factor,
+    )
+    probs, logits = routing.router_probs(params["router"], xf)
+
+    if cfg.moe_dispatch == "einsum":
+        gs = min(cfg.moe_group_size, xf.shape[0])
+        combine, dispatch, aux = routing.einsum_dispatch_combine(probs, rcfg, gs)
+        # DeepSeek-style top-k gate normalization
+        denom = jnp.sum(combine, axis=(-1, -2), keepdims=True) + 1e-9
+        combine = combine / denom
+        g = xf.shape[0] // gs
+        xg = xf.reshape(g, gs, d)
+        combine = shard_hint(combine.astype(x.dtype), "batch", None, "experts", None)
+        dispatch = shard_hint(dispatch.astype(x.dtype), "batch", None, "experts", None)
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+        xe = shard_hint(xe, "batch", "experts", None, "act_embed")
+        ye = _experts_apply_grouped(params, xe, cfg, cfg.quant)
+        y = jnp.einsum("gsec,gecd->gsd", combine, ye).reshape(-1, d)
+    else:
+        dispatch = routing.topk_dispatch(probs, rcfg)
+        # DeepSeek normalizes the selected top-k gates to sum to 1
+        cw = dispatch["combine_weight"]
+        dispatch["combine_weight"] = cw / (jnp.sum(cw, axis=-1, keepdims=True) + 1e-9)
+        xe = routing.dispatch_gather(xf, dispatch)
+        xe = shard_hint(xe, "experts", None, "act_embed")
+        ye = _experts_apply(params, xe, cfg, cfg.quant)
+        y = routing.combine_scatter(ye, dispatch, xf.shape[0])
+        aux = dispatch["aux_loss"]
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * rcfg.router_z_weight
+    aux = aux + z.astype(aux.dtype)
+
+    if "shared" in params:
+        ys, aux_s = apply_ffn(params["shared"], xf, cfg)
+        y = y + ys
+        aux = aux + aux_s
+    return y.reshape(*lead, d), aux

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Temporal mixing block: two input linears (gate branch with GELU, recurrence
+branch with a short depthwise conv), the Real-Gated LRU diagonal recurrence,
+and an output linear.  Training uses ``jax.lax.associative_scan`` (log-depth
+parallel over sequence); decode keeps a constant-size hidden state.
+
+Quantization (DESIGN.md §5): the three projections are BitLinear in
+quantized modes; the RG-LRU gates (W_a, W_x) and Lambda stay FP — they
+parameterize a recurrence decay where sign-binarization is degenerate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.bitlinear import bitlinear, init_linear
+from repro.distributed.sharding import shard_hint
+
+Array = jax.Array
+
+
+def init_rglru_block(key: Array, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    params, axes = {}, {}
+    for name, k, di, do, ax in (
+        ("wx", ks[0], d, w, ("embed", "ffn")),
+        ("wy", ks[1], d, w, ("embed", "ffn")),
+        ("wout", ks[2], w, d, ("ffn", "embed")),
+    ):
+        p, a = init_linear(k, di, do, ax)
+        params[name], axes[name] = p, a
+    # RG-LRU gates: stay FP (recurrence-critical)
+    for name, k in (("wa", ks[3]), ("wi", ks[4])):
+        # gates stay FP; input dim unsharded, output dim model-sharded so the
+        # gated recurrence stays aligned with the conv/branch activations
+        p, a = init_linear(k, w, w, (None, "ffn"))
+        params[name], axes[name] = p, a
+    # Lambda: a = sigmoid(Lambda) init so a^c in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    a_target = u ** (1.0 / cfg.rglru_c)
+    params["lam"] = jnp.log(a_target) - jnp.log1p(-a_target)  # logit
+    axes["lam"] = ("act_ffn",)
+    params["conv_w"] = jax.random.normal(ks[5], (cfg.conv_kernel, w), jnp.float32) * 0.02
+    axes["conv_w"] = ("conv", "ffn")
+    params["conv_b"] = jnp.zeros((w,), jnp.float32)
+    axes["conv_b"] = ("ffn",)
+    return params, axes
+
+
+def _rglru_gates(params, x: Array, cfg: ModelConfig):
+    """log_a (B,S,W) and gated input, computed in fp32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["wa"]["w"])
+    i = jax.nn.sigmoid(x32 @ params["wi"]["w"])
+    # log a_t = -c * softplus(-Lambda) * r_t   (a = sigmoid(Lambda))
+    log_a = -cfg.rglru_c * jax.nn.softplus(-params["lam"])[None, None] * r
+    a_sq = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-12)) * (i * x32)
+    return log_a, gated
+
+
+def _assoc_scan(log_a: Array, b: Array) -> Array:
+    """h_t = exp(log_a_t) * h_{t-1} + b_t along axis 1, h_0 = 0."""
+
+    def combine(left, right):
+        la_l, b_l = left
+        la_r, b_r = right
+        return la_l + la_r, jnp.exp(la_r) * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence recurrent mixing. x: (B,S,D) -> (B,S,D)."""
+    gate = jax.nn.gelu(bitlinear(params["wy"], x, cfg.quant), approximate=True)
+    u = bitlinear(params["wx"], x, cfg.quant)
+    k = params["conv_w"].shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        up[:, i : i + u.shape[1], :] * params["conv_w"][i][None, None].astype(u.dtype)
+        for i in range(k)
+    ) + params["conv_b"][None, None].astype(u.dtype)
+    conv = shard_hint(conv, "batch", "seq", "act_ffn")
+    log_a, gated = _rglru_gates(params, conv, cfg)
+    h = _assoc_scan(log_a, gated)
+    y = bitlinear(params["wout"], h.astype(x.dtype) * gate, cfg.quant)
+    if not return_cache:
+        return y
+    cache = {"h": h[:, -1], "conv": u[:, u.shape[1] - (k - 1) :, :]}
+    return y, cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    cache = {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype),
+    }
+    axes = {"h": ("batch", "act_ffn"), "conv": ("batch", None, "act_ffn")}
+    return cache, axes
+
+
+def rglru_decode(params, x: Array, cache: dict, cfg: ModelConfig):
+    """One-step recurrent mixing. x: (B,1,D)."""
+    gate = jax.nn.gelu(bitlinear(params["wy"], x, cfg.quant), approximate=True)
+    u = bitlinear(params["wx"], x, cfg.quant)  # (B,1,W)
+    win = jnp.concatenate([cache["conv"], u.astype(cache["conv"].dtype)], axis=1)
+    conv = (
+        jnp.einsum("bkw,kw->bw", win.astype(x.dtype), params["conv_w"].astype(x.dtype))
+        + params["conv_b"][None].astype(x.dtype)
+    )[:, None]
+    log_a, gated = _rglru_gates(params, conv, cfg)
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + gated[:, 0]
+    y = bitlinear(params["wout"], (h[:, None].astype(x.dtype)) * gate, cfg.quant)
+    return y, {"h": h, "conv": win[:, 1:]}

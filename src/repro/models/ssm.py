@@ -1,0 +1,318 @@
+"""Mamba-2 (SSD — state-space duality) block, attention-free architecture.
+
+Chunked SSD algorithm following the Mamba-2 paper's minimal reference:
+within-chunk terms are dense matmuls ("attention-like"), cross-chunk terms
+a short recurrence over chunk states — a TPU-friendly decomposition (MXU
+for the quadratic-in-chunk terms, small sequential scan across chunks).
+
+pQuant adaptation (DESIGN.md §5): Mamba-2 has no FFN, so the paper's
+decoupled layer applies to the in/out projections via
+``core.decoupled.decoupled_proj`` (1-bit dominant + r-wide 8-bit bottleneck
+branch).  Conv/SSD/gate parameters (<2% of the total) stay FP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.decoupled import decoupled_proj, init_decoupled_proj
+from repro.core.bitlinear import bitlinear, init_linear, init_rmsnorm, rmsnorm
+from repro.core.routing import RouterConfig
+from repro.distributed.sharding import shard_hint
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    proj_out = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + nheads
+    return d_in, nheads, conv_dim, proj_out
+
+
+def init_mamba_block(key: Array, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, nheads, conv_dim, proj_out = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    params, axes = {}, {}
+
+    q = cfg.quant
+    if q.mode == "pquant":
+        p, a = init_decoupled_proj(
+            ks[0], d, proj_out, q.r, axes_out="ffn",
+            num_experts=q.num_experts,
+            alpha_init=q.alpha_init, beta_init=q.beta_init,
+        )
+        params["in_proj"], axes["in_proj"] = p, a
+        p, a = init_decoupled_proj(
+            ks[1], d_in, d, q.r, axes_in="ffn", axes_out="embed",
+            num_experts=q.num_experts,
+            alpha_init=q.alpha_init, beta_init=q.beta_init,
+        )
+        params["out_proj"], axes["out_proj"] = p, a
+    else:
+        p, a = init_linear(ks[0], d, proj_out, ("embed", "ffn"))
+        params["in_proj"], axes["in_proj"] = p, a
+        p, a = init_linear(ks[1], d_in, d, ("ffn", "embed"))
+        params["out_proj"], axes["out_proj"] = p, a
+
+    # depthwise causal conv over [x, B, C]
+    params["conv_w"] = (
+        jax.random.normal(ks[2], (cfg.conv_kernel, conv_dim), jnp.float32) * 0.02
+    )
+    axes["conv_w"] = ("conv", "ffn")
+    params["conv_b"] = jnp.zeros((conv_dim,), jnp.float32)
+    axes["conv_b"] = ("ffn",)
+
+    # SSD per-head parameters
+    a_init = jax.random.uniform(ks[3], (nheads,), jnp.float32, 1.0, 16.0)
+    params["A_log"] = jnp.log(a_init)
+    axes["A_log"] = ("heads",)
+    params["D"] = jnp.ones((nheads,), jnp.float32)
+    axes["D"] = ("heads",)
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (nheads,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(1e-3))
+        + jnp.log(1e-3)
+    )
+    params["dt_bias"] = dt + jnp.log(-jnp.expm1(-dt))
+    axes["dt_bias"] = ("heads",)
+
+    p, a = init_rmsnorm(d_in, axis="ffn")
+    params["gate_norm"], axes["gate_norm"] = p, a
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., cs). Returns (..., cs, cs) with S[i,j] = sum_{k=j+1..i} a_k
+    on the lower triangle (i >= j), -inf above."""
+    cs = a.shape[-1]
+    ac = jnp.cumsum(a, axis=-1)
+    diff = ac[..., :, None] - ac[..., None, :]
+    i = jnp.arange(cs)[:, None]
+    j = jnp.arange(cs)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array,  # (B, L, H, P)  — already multiplied by dt
+    dta: Array,  # (B, L, H)     — dt * A (negative log-decays)
+    b_mat: Array,  # (B, L, G, N)
+    c_mat: Array,  # (B, L, G, N)
+    chunk: int,
+    initial_state: Array | None = None,  # (B, H, P, N)
+):
+    """Chunked SSD. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    l_orig = l
+    if l % chunk != 0:
+        # pad with identity steps: x=0 contributes nothing, dta=0 -> decay 1
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dta = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // chunk
+    rep = h // g
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = dta.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,nc,cs)
+    bc = b_mat.reshape(bsz, nc, chunk, g, n)
+    cc = c_mat.reshape(bsz, nc, chunk, g, n)
+    # broadcast groups to heads
+    bh = jnp.repeat(bc, rep, axis=3)  # (B,nc,cs,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=-1)  # (B,H,nc,cs)
+
+    # 1. within-chunk (diagonal blocks)
+    l_mat = jnp.exp(_segsum(ac))  # (B,H,nc,cs,cs)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", ch, bh, l_mat, xc)
+
+    # 2. chunk states (decayed contribution of each chunk to its last step)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,nc,cs)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", bh, decay_states, xc)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B,H,nc)
+    s0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), x.dtype)
+    )
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1))
+    final, prev_states = jax.lax.scan(step, s0, xs)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4. cross-chunk output
+    state_decay_out = jnp.exp(a_cum)  # (B,H,nc,cs)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", ch, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)[:, :l_orig]
+    return y, final
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv: x (B, L, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is 4 — unrolled adds, no gather
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_proj(zxbcdt: Array, cfg: ModelConfig):
+    d_in, nheads, conv_dim, _ = _dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]
+    return z, xbc, dt
+
+
+def _apply_in_proj(params, x, cfg: ModelConfig):
+    if cfg.quant.mode == "pquant":
+        rcfg = (
+            RouterConfig(num_experts=cfg.quant.num_experts, top_k=1)
+            if cfg.quant.num_experts > 1
+            else None
+        )
+        return decoupled_proj(params["in_proj"], x, cfg.quant, rcfg)
+    return bitlinear(params["in_proj"], x, cfg.quant), jnp.zeros((), jnp.float32)
+
+
+def _apply_out_proj(params, y, cfg: ModelConfig):
+    if cfg.quant.mode == "pquant":
+        rcfg = (
+            RouterConfig(num_experts=cfg.quant.num_experts, top_k=1)
+            if cfg.quant.num_experts > 1
+            else None
+        )
+        return decoupled_proj(params["out_proj"], y, cfg.quant, rcfg)
+    return bitlinear(params["out_proj"], y, cfg.quant), jnp.zeros((), jnp.float32)
+
+
+def mamba_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence Mamba-2 mixing block. x: (B, S, D).
+
+    Returns (y, aux) or (y, aux, cache) with cache = {conv tail, final state}
+    so decode can continue (prefill).
+    """
+    bsz, s, _ = x.shape
+    d_in, nheads, conv_dim, _ = _dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+
+    zxbcdt, aux_in = _apply_in_proj(params, x, cfg)
+    z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(
+        _causal_conv(
+            xbc_raw, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)
+        )
+    )
+    xs = xbc[..., :d_in]
+    b_mat = xbc[..., d_in : d_in + gn].reshape(bsz, s, cfg.ssm_groups, cfg.ssm_state)
+    c_mat = xbc[..., d_in + gn :].reshape(bsz, s, cfg.ssm_groups, cfg.ssm_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    a = -jnp.exp(params["A_log"])[None, None]  # (1,1,H)
+    xh = xs.reshape(bsz, s, nheads, cfg.ssm_headdim)
+    xh = shard_hint(xh, "batch", "seq", "act_heads", None)
+
+    y, final_state = ssd_chunked(
+        (xh.astype(jnp.float32) * dt[..., None]),
+        dt * a,
+        b_mat.astype(jnp.float32),
+        c_mat.astype(jnp.float32),
+        cfg.ssm_chunk,
+    )
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = shard_hint(y, "batch", "seq", "act_ffn")
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    out, aux_out = _apply_out_proj(params, y, cfg)
+    if not return_cache:
+        return out, aux_in + aux_out
+    k = cfg.conv_kernel
+    cache = {
+        "conv": xbc_raw[:, s - (k - 1) :, :],
+        "state": final_state,
+    }
+    return out, aux_in + aux_out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single step, constant-size state)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, nheads, conv_dim, _ = _dims(cfg)
+    cache = {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros(
+            (batch, nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+    }
+    axes = {
+        "conv": ("batch", None, "act_ffn"),
+        "state": ("batch", "act_heads", None, None),
+    }
+    return cache, axes
+
+
+def mamba_decode(params, x: Array, cache: dict, cfg: ModelConfig):
+    """x: (B, 1, D). Returns (y, new_cache)."""
+    bsz = x.shape[0]
+    d_in, nheads, conv_dim, _ = _dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+
+    zxbcdt, aux = _apply_in_proj(params, x, cfg)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = xbc[:, 0]  # (B, conv_dim)
+
+    # conv with rolling window state
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(x.dtype), w) + params["conv_b"].astype(x.dtype)
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:]
+
+    xs = xbc_t[..., :d_in].reshape(bsz, nheads, cfg.ssm_headdim)
+    b_vec = xbc_t[..., d_in : d_in + gn].reshape(bsz, cfg.ssm_groups, cfg.ssm_state)
+    c_vec = xbc_t[..., d_in + gn :].reshape(bsz, cfg.ssm_groups, cfg.ssm_state)
+    rep = nheads // cfg.ssm_groups
+    b_h = jnp.repeat(b_vec, rep, axis=1)  # (B,H,N)
+    c_h = jnp.repeat(c_vec, rep, axis=1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"][None])  # (B,H)
+    a = -jnp.exp(params["A_log"])[None]  # (1,H)
+    da = jnp.exp(dt * a)  # (B,H)
+
+    xs32 = xs.astype(jnp.float32)
+    new_state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xs32, b_h.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_h.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xs32
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    out, aux_out = _apply_out_proj(params, y, cfg)
+    return out, {"conv": new_conv, "state": new_state}

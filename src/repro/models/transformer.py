@@ -1,0 +1,607 @@
+"""Decoder LM assembly: dense / MoE / SSM / hybrid families behind one API.
+
+The model is a list of *segments*; each segment is a group of heterogeneous
+blocks repeated R times.  Repeated segments are executed with
+``jax.lax.scan`` over stacked parameters so the compiled HLO is O(1) in
+depth (production-scale compile times at 512 devices), with per-layer
+metadata (sliding-window size, local/global RoPE selection) passed as
+scanned arrays so architectures like Gemma-3 (5 local : 1 global) keep a
+single uniform scan.
+
+API:
+  init_model(key, cfg)                      -> (params, axes)
+  forward(params, batch, cfg)               -> (logits, aux_loss)
+  init_cache(cfg, batch, max_len, dtype)    -> (cache, axes)
+  prefill(params, batch, cache, cfg)        -> (logits_last, cache)
+  decode_step(params, token, cache, pos, cfg) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_ffn,
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_ffn,
+    init_rmsnorm,
+    rmsnorm,
+    rope_table,
+    unembed,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str  # attn | mla | ssm | rec
+    ffn: Optional[str]  # dense | moe | None
+    # static sliding window of this block (0 = full attention).  Determines
+    # the KV-cache length: windowed layers keep a RING cache of exactly
+    # `window` positions (gemma3 long_500k: 52/62 layers cache 1024, not 512k)
+    window: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    repeats: int
+    blocks: tuple[BlockSpec, ...]
+    # absolute layer index of the first block (for window/theta metadata)
+    first_layer: int
+
+
+def build_segments(cfg: ModelConfig) -> list[Segment]:
+    if cfg.family == "ssm":
+        return [Segment(cfg.n_layers, (BlockSpec("ssm", None),), 0)]
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        g = len(pat)
+        reps, rem = divmod(cfg.n_layers, g)
+        def bs(m, layer):
+            return BlockSpec(m, "dense", layer_window(cfg, layer))
+        segs = [
+            Segment(reps, tuple(bs(m, i) for i, m in enumerate(pat)), 0)
+        ]
+        if rem:
+            segs.append(
+                Segment(
+                    1, tuple(bs(m, reps * g + i) for i, m in enumerate(pat[:rem])),
+                    reps * g,
+                )
+            )
+        return segs
+    # decoder family (incl. MoE)
+    mixer = "mla" if cfg.attn_type == "mla" else "attn"
+    if cfg.moe:
+        k = cfg.first_k_dense
+        segs = []
+        if k > 0:
+            segs.append(Segment(1, tuple(BlockSpec(mixer, "dense") for _ in range(k)), 0))
+        segs.append(Segment(cfg.n_layers - k, (BlockSpec(mixer, "moe"),), k))
+        return segs
+    if cfg.global_every > 0:
+        # group by the local:global period so per-block cache lengths are
+        # uniform across scan repeats (local blocks get ring caches)
+        g = cfg.global_every
+        reps, rem = divmod(cfg.n_layers, g)
+        blocks = tuple(
+            BlockSpec(mixer, "dense", layer_window(cfg, i)) for i in range(g)
+        )
+        segs = [Segment(reps, blocks, 0)]
+        if rem:
+            segs.append(
+                Segment(
+                    1,
+                    tuple(BlockSpec(mixer, "dense", layer_window(cfg, reps * g + i))
+                          for i in range(rem)),
+                    reps * g,
+                )
+            )
+        return segs
+    win = cfg.window_size if cfg.attn_type == "swa" else 0
+    return [Segment(cfg.n_layers, (BlockSpec(mixer, "dense", win),), 0)]
+
+
+def layer_window(cfg: ModelConfig, layer: int) -> int:
+    """Static per-layer sliding window (0 = global/full)."""
+    if cfg.global_every > 0:
+        return 0 if (layer + 1) % cfg.global_every == 0 else cfg.window_size
+    if cfg.attn_type == "swa":
+        return cfg.window_size
+    return 0
+
+
+def layer_uses_local_rope(cfg: ModelConfig, layer: int) -> bool:
+    return cfg.global_every > 0 and (layer + 1) % cfg.global_every != 0
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key: Array, spec: BlockSpec, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+
+    def add(name, pa):
+        params[name], axes[name] = pa
+
+    add("pre_norm", init_rmsnorm(cfg.d_model, axis="act_embed"))
+    if spec.mixer == "attn":
+        add("mixer", attn_mod.init_attention(ks[0], cfg))
+    elif spec.mixer == "mla":
+        add("mixer", attn_mod.init_mla(ks[0], cfg))
+    elif spec.mixer == "ssm":
+        add("mixer", ssm_mod.init_mamba_block(ks[0], cfg))
+    elif spec.mixer == "rec":
+        add("mixer", rglru_mod.init_rglru_block(ks[0], cfg))
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn is not None:
+        add("ffn_norm", init_rmsnorm(cfg.d_model, axis="act_embed"))
+        if spec.ffn == "dense":
+            add("ffn", init_ffn(ks[1], cfg))
+        elif spec.ffn == "moe":
+            add("ffn", moe_mod.init_moe_ffn(ks[1], cfg))
+        else:
+            raise ValueError(spec.ffn)
+    return params, axes
+
+
+def _apply_mixer(
+    bparams,
+    spec: BlockSpec,
+    x: Array,
+    cfg: ModelConfig,
+    rope_tabs,
+    meta: dict,
+    cache_len: Optional[int] = None,
+):
+    """Full-sequence mixer. Returns (y, aux, cache_or_None)."""
+    zero = jnp.zeros((), jnp.float32)
+    if spec.mixer == "attn":
+        sin, cos = rope_tabs
+        if cfg.global_every > 0:
+            use_local = meta["use_local_rope"]
+            sin_g, sin_l = sin
+            cos_g, cos_l = cos
+            sin = jnp.where(use_local, sin_l, sin_g)
+            cos = jnp.where(use_local, cos_l, cos_g)
+        else:
+            sin, cos = sin[0], cos[0]
+        blk_cache_len = cache_len
+        if cache_len and spec.window > 0:
+            blk_cache_len = min(spec.window, cache_len)  # ring cache length
+        out = attn_mod.attention(
+            bparams["mixer"], x, cfg, sin, cos,
+            window=meta["window"], causal=cfg.family != "encoder",
+            cache_len=blk_cache_len,
+        )
+        return (out[0], zero, out[1]) if cache_len else (out, zero, None)
+    if spec.mixer == "mla":
+        pos = jnp.arange(x.shape[1])
+        out = attn_mod.mla_attention(
+            bparams["mixer"], x, cfg, pos, cache_len=cache_len
+        )
+        return (out[0], zero, out[1]) if cache_len else (out, zero, None)
+    if spec.mixer == "ssm":
+        out = ssm_mod.mamba_block(
+            bparams["mixer"], x, cfg, return_cache=cache_len is not None
+        )
+        return (out[0], out[1], out[2]) if cache_len else (out[0], out[1], None)
+    if spec.mixer == "rec":
+        out = rglru_mod.rglru_block(
+            bparams["mixer"], x, cfg, return_cache=cache_len is not None
+        )
+        return (out[0], zero, out[1]) if cache_len else (out, zero, None)
+    raise ValueError(spec.mixer)
+
+
+def _apply_block(
+    bparams,
+    spec: BlockSpec,
+    x: Array,
+    cfg: ModelConfig,
+    rope_tabs,
+    meta,
+    cache_len: Optional[int] = None,
+):
+    """Pre-norm residual block. Returns (x, aux, cache_or_None)."""
+    h = rmsnorm(bparams["pre_norm"], x)
+    y, aux, cache = _apply_mixer(bparams, spec, h, cfg, rope_tabs, meta, cache_len)
+    x = x + y
+    if spec.ffn is not None:
+        h = rmsnorm(bparams["ffn_norm"], x)
+        if spec.ffn == "moe":
+            y, aux2 = moe_mod.moe_ffn(bparams["ffn"], h, cfg)
+        else:
+            y, aux2 = apply_ffn(bparams["ffn"], h, cfg)
+        x = x + y
+        aux = aux + aux2
+    # "resid_seq" (default unsharded) enables sequence parallelism via a
+    # rule override: the residual stream shards over `model` between
+    # blocks, turning TP all-reduces into reduce-scatter/all-gather pairs
+    x = shard_hint(x, "batch", "resid_seq", "act_embed")
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def _stack_trees(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_axes(axes):
+    """Prepend the (unsharded) layer-stack axis to every axes tuple."""
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a), axes, is_leaf=lambda t: isinstance(t, tuple)
+    )
+
+
+def init_model(key: Array, cfg: ModelConfig):
+    segs = build_segments(cfg)
+    keys = jax.random.split(key, len(segs) + 2)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+
+    p, a = init_embedding(keys[0], cfg.vocab_size, cfg.d_model)
+    params["embed"], axes["embed"] = p, a
+
+    seg_params, seg_axes = [], []
+    for si, seg in enumerate(segs):
+        skeys = jax.random.split(keys[si + 1], seg.repeats)
+        blocks_p, blocks_a = {}, {}
+        for bi, spec in enumerate(seg.blocks):
+            if seg.repeats == 1:
+                bp, ba = _init_block(
+                    jax.random.fold_in(skeys[0], bi), spec, cfg
+                )
+            else:
+                reps = [
+                    _init_block(jax.random.fold_in(skeys[r], bi), spec, cfg)
+                    for r in range(seg.repeats)
+                ]
+                bp = _stack_trees([r[0] for r in reps])
+                ba = _stack_axes(reps[0][1])
+            blocks_p[f"b{bi}"] = bp
+            blocks_a[f"b{bi}"] = ba
+        seg_params.append(blocks_p)
+        seg_axes.append(blocks_a)
+    params["segments"] = seg_params
+    axes["segments"] = seg_axes
+
+    p, a = init_rmsnorm(cfg.d_model, axis="act_embed")
+    params["final_norm"], axes["final_norm"] = p, a
+    if not cfg.tie_embeddings:
+        p, a = init_embedding(keys[-1], cfg.vocab_size, cfg.d_model)
+        params["lm_head"], axes["lm_head"] = p, a
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Metadata (per-layer window / rope selection) for scans
+# ---------------------------------------------------------------------------
+
+
+def _segment_meta(cfg: ModelConfig, seg: Segment):
+    """Stacked per-repeat metadata arrays for each block in the segment."""
+    metas = []
+    for bi in range(len(seg.blocks)):
+        layers = [seg.first_layer + r * len(seg.blocks) + bi for r in range(seg.repeats)]
+        metas.append(
+            {
+                "window": jnp.asarray([layer_window(cfg, l) for l in layers], jnp.int32),
+                "use_local_rope": jnp.asarray(
+                    [layer_uses_local_rope(cfg, l) for l in layers], bool
+                ),
+            }
+        )
+    return metas
+
+
+def _rope_tabs(cfg: ModelConfig, positions: Array):
+    if cfg.pos_embedding != "rope":
+        return None
+    sin_g, cos_g = rope_table(positions, cfg.head_dim, cfg.rope_theta)
+    if cfg.global_every > 0:
+        sin_l, cos_l = rope_table(positions, cfg.head_dim, cfg.rope_theta_local)
+        return (sin_g, sin_l), (cos_g, cos_l)
+    return (sin_g,), (cos_g,)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / eval, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _run_segments(
+    params, x: Array, cfg: ModelConfig, rope_tabs, cache_len: Optional[int] = None
+):
+    """Returns (x, aux_total, caches) — caches is None unless cache_len set."""
+    segs = build_segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    all_caches = [] if cache_len else None
+    for si, seg in enumerate(segs):
+        seg_p = params["segments"][si]
+        metas = _segment_meta(cfg, seg)
+        if seg.repeats == 1:
+            seg_cache = {}
+            for bi, spec in enumerate(seg.blocks):
+                meta = {k: v[0] for k, v in metas[bi].items()}
+                x, aux, c = _apply_block(
+                    seg_p[f"b{bi}"], spec, x, cfg, rope_tabs, meta, cache_len
+                )
+                aux_total = aux_total + aux
+                if cache_len:
+                    seg_cache[f"b{bi}"] = c
+            if cache_len:
+                all_caches.append(seg_cache)
+        elif not cfg.scan_layers:
+            # unrolled execution (scan_layers=False): bigger HLO, exact
+            # per-layer cost accounting; used by roofline calibration.
+            # remat is applied per group so compute matches the scanned path.
+            def one_group(x_aux, layer_p, metas_r, rr):
+                x, aux_acc = x_aux
+                caches = {}
+                for bi, spec in enumerate(seg.blocks):
+                    x, aux, c = _apply_block(
+                        layer_p[f"b{bi}"], spec, x, cfg, rope_tabs,
+                        metas_r[f"b{bi}"], cache_len,
+                    )
+                    aux_acc = aux_acc + aux
+                    if cache_len:
+                        caches[f"b{bi}"] = c
+                return (x, aux_acc), caches
+
+            if cfg.remat and not cache_len:
+                one_group = jax.checkpoint(
+                    one_group,
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=(3,),
+                )
+            reps = []
+            for r in range(seg.repeats):
+                layer_p = jax.tree.map(lambda t: t[r], seg_p)
+                metas_r = {
+                    f"b{bi}": {k: v[r] for k, v in metas[bi].items()}
+                    for bi in range(len(seg.blocks))
+                }
+                (x, aux_total), layer_cache = one_group(
+                    (x, aux_total), layer_p, metas_r, r
+                )
+                reps.append(layer_cache)
+            if cache_len:
+                all_caches.append(
+                    jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+                )
+        else:
+
+            def body(carry, inp):
+                x, aux_acc = carry
+                bp_all, meta_all = inp
+                aux_layer = jnp.zeros((), jnp.float32)
+                caches = {}
+                for bi, spec in enumerate(seg.blocks):
+                    x, aux, c = _apply_block(
+                        bp_all[f"b{bi}"], spec, x, cfg, rope_tabs,
+                        meta_all[f"b{bi}"], cache_len,
+                    )
+                    aux_layer = aux_layer + aux
+                    if cache_len:
+                        caches[f"b{bi}"] = c
+                return (x, aux_acc + aux_layer), (caches if cache_len else None)
+
+            if cfg.remat and not cache_len:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            xs = (seg_p, {f"b{bi}": metas[bi] for bi in range(len(seg.blocks))})
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+            if cache_len:
+                all_caches.append(ys)
+    return x, aux_total, all_caches
+
+
+def _embed_inputs(params, batch: dict, cfg: ModelConfig) -> Array:
+    x = embed(params["embed"], batch["tokens"], cfg)
+    if cfg.n_image_tokens > 0 and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(params, batch: dict, cfg: ModelConfig):
+    """batch: {"tokens": (B,S)} (+ "image_embeds" for VLM).
+    Returns (logits (B,S_total,V), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    x = shard_hint(x, "batch", "seq", "act_embed")
+    positions = jnp.arange(x.shape[1])
+    tabs = _rope_tabs(cfg, positions)
+    x, aux, _ = _run_segments(params, x, cfg, tabs)
+    x = rmsnorm(params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x, cfg)
+    logits = shard_hint(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig):
+    """Next-token CE over the text positions. batch needs "tokens" and
+    "labels" (both (B,S)); image positions (if any) are excluded."""
+    logits, aux = forward(params, batch, cfg)
+    n_img = cfg.n_image_tokens if "image_embeds" in batch else 0
+    logits = logits[:, n_img:]
+    loss, nll = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss + aux.astype(loss.dtype), {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(spec: BlockSpec, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if spec.mixer == "attn":
+        length = min(spec.window, max_len) if spec.window > 0 else max_len
+        return attn_mod.init_attention_cache(cfg, batch, length, dtype)
+    if spec.mixer == "mla":
+        return attn_mod.init_mla_cache(cfg, batch, max_len, dtype)
+    if spec.mixer == "ssm":
+        return ssm_mod.init_mamba_cache(cfg, batch, dtype)
+    if spec.mixer == "rec":
+        return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    segs = build_segments(cfg)
+    caches, axes = [], []
+    for seg in segs:
+        seg_c, seg_a = {}, {}
+        for bi, spec in enumerate(seg.blocks):
+            c, a = _init_block_cache(spec, cfg, batch, max_len, dtype)
+            if seg.repeats > 1:
+                c = jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (seg.repeats,) + t.shape), c
+                )
+                a = _stack_axes(a)
+            seg_c[f"b{bi}"] = c
+            seg_a[f"b{bi}"] = a
+        caches.append(seg_c)
+        axes.append(seg_a)
+    return caches, axes
+
+
+def _mixer_decode(bparams, spec: BlockSpec, x, cache, pos, cfg: ModelConfig, meta):
+    if spec.mixer == "attn":
+        if cfg.global_every > 0:
+            theta = jnp.where(
+                meta["use_local_rope"], cfg.rope_theta_local, cfg.rope_theta
+            )
+        else:
+            theta = cfg.rope_theta
+        return attn_mod.attention_decode(
+            bparams["mixer"], x, cache, pos, cfg, theta, window=meta["window"]
+        )
+    if spec.mixer == "mla":
+        return attn_mod.mla_decode(bparams["mixer"], x, cache, pos, cfg)
+    if spec.mixer == "ssm":
+        return ssm_mod.mamba_decode(bparams["mixer"], x, cache, cfg)
+    if spec.mixer == "rec":
+        return rglru_mod.rglru_decode(bparams["mixer"], x, cache, cfg)
+    raise ValueError(spec.mixer)
+
+
+def _decode_block(bparams, spec, x, cache, pos, cfg, meta):
+    h = rmsnorm(bparams["pre_norm"], x)
+    y, new_cache = _mixer_decode(bparams, spec, h, cache, pos, cfg, meta)
+    x = x + y
+    if spec.ffn is not None:
+        h = rmsnorm(bparams["ffn_norm"], x)
+        if spec.ffn == "moe":
+            y, _ = moe_mod.moe_ffn(bparams["ffn"], h, cfg)
+        else:
+            y, _ = apply_ffn(bparams["ffn"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (current
+    write index).  Returns (logits (B,1,V), new_caches)."""
+    x = embed(params["embed"], tokens, cfg)
+    segs = build_segments(cfg)
+    new_caches = []
+    for si, seg in enumerate(segs):
+        seg_p = params["segments"][si]
+        seg_c = caches[si]
+        metas = _segment_meta(cfg, seg)
+        if seg.repeats == 1:
+            new_seg = {}
+            for bi, spec in enumerate(seg.blocks):
+                meta = {k: v[0] for k, v in metas[bi].items()}
+                x, nc = _decode_block(
+                    seg_p[f"b{bi}"], spec, x, seg_c[f"b{bi}"], pos, cfg, meta
+                )
+                new_seg[f"b{bi}"] = nc
+            new_caches.append(new_seg)
+        elif not cfg.scan_layers:
+            reps = []
+            for r in range(seg.repeats):
+                layer_p = jax.tree.map(lambda t: t[r], seg_p)
+                layer_c = jax.tree.map(lambda t: t[r], seg_c)
+                new_c = {}
+                for bi, spec in enumerate(seg.blocks):
+                    meta = {k: v[r] for k, v in metas[bi].items()}
+                    x, nc = _decode_block(
+                        layer_p[f"b{bi}"], spec, x, layer_c[f"b{bi}"], pos, cfg, meta
+                    )
+                    new_c[f"b{bi}"] = nc
+                reps.append(new_c)
+            new_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+        else:
+
+            def body(x, inp):
+                bp_all, c_all, meta_all = inp
+                new_c = {}
+                for bi, spec in enumerate(seg.blocks):
+                    x, nc = _decode_block(
+                        bp_all[f"b{bi}"], spec, x, c_all[f"b{bi}"], pos, cfg,
+                        meta_all[f"b{bi}"],
+                    )
+                    new_c[f"b{bi}"] = nc
+                return x, new_c
+
+            xs = (
+                seg_p,
+                seg_c,
+                {f"b{bi}": metas[bi] for bi in range(len(seg.blocks))},
+            )
+            x, new_seg = jax.lax.scan(body, x, xs)
+            new_caches.append(new_seg)
+    x = rmsnorm(params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x, cfg)
+    return logits, new_caches
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
+    """Run the full prompt once, producing last-position logits and filled
+    KV caches of length ``cache_len`` (>= prompt length).
+
+    Returns (logits_last (B,V), caches).  Cache structure matches
+    :func:`init_cache` / :func:`decode_step`.
+    """
+    x = _embed_inputs(params, batch, cfg)
+    x = shard_hint(x, "batch", "seq", "act_embed")
+    positions = jnp.arange(x.shape[1])
+    tabs = _rope_tabs(cfg, positions)
+    x, _, caches = _run_segments(params, x, cfg, tabs, cache_len=cache_len)
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x, cfg)
+    return logits[:, 0], caches

@@ -1,0 +1,116 @@
+"""AdamW built from scratch (no optax in this environment).
+
+Matches the paper's recipe: Adam beta=(0.9, 0.95), FP32 moments and master
+(latent) weights, global-norm gradient clipping, schedule-driven decoupled
+weight decay (the two-phase WD comes in via the schedule object).
+
+The optimizer state is a plain pytree so it shards with the same logical
+axes as the parameters (FSDP over `data` x TP over `model`) and checkpoints
+through ``repro.checkpoint``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    # parameters whose path contains one of these fragments skip weight
+    # decay (norms, scalars, biases — and the feature-scaling alpha/beta)
+    no_decay_fragments: tuple = ("norm", "alpha", "beta", "lam", "dt_bias", "A_log", "D")
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any
+    nu: Any
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    )
+
+
+def adamw_state_axes(param_axes) -> AdamWState:
+    """Logical axes for the optimizer state (moments shard like params)."""
+    return AdamWState(step=(), mu=param_axes, nu=param_axes)
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def _decay_mask(params, cfg: AdamWConfig):
+    import jax.tree_util as jtu
+
+    paths, treedef = jtu.tree_flatten_with_path(params)
+    mask = []
+    for path, leaf in paths:
+        keys = "/".join(str(getattr(e, "key", getattr(e, "idx", ""))) for e in path)
+        skip = any(f in keys for f in cfg.no_decay_fragments) or leaf.ndim <= 1
+        mask.append(not skip)
+    return jtu.tree_unflatten(treedef, mask)
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: Array,
+    wd: Array,
+    cfg: AdamWConfig = AdamWConfig(),
+):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    decay_mask = _decay_mask(params, cfg)
+
+    def upd(g, m, v, p, do_decay):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if do_decay:
+            delta = delta + wd * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_mask = treedef.flatten_up_to(decay_mask)
+
+    out = [
+        upd(g, m, v, p, dm)
+        for g, m, v, p, dm in zip(flat_g, flat_m, flat_v, flat_p, flat_mask)
+    ]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr, "wd": wd}
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics

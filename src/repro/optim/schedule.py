@@ -1,0 +1,91 @@
+"""Two-phase LR / weight-decay schedule (paper Appendix B.2, Figure 9).
+
+Phase 1 [0, mid): warmup then linear decay from peak_lr; weight decay 0.1.
+Phase 2 [mid, end): restart at a lower LR, linear decay to ~0; WD disabled.
+
+The mid-training loss drop the paper highlights (Figure 5b) comes from this
+schedule, so it is reproduced exactly.  FP16 baselines use a standard
+cosine schedule (paper §E: "half-precision models did not benefit from a
+similar decay strategy").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoPhaseSchedule:
+    peak_lr: float = 1.5e-3
+    phase2_lr: float = 1e-4
+    final_lr: float = 1e-5
+    warmup_steps: int = 500  # paper: 500 warmup steps
+    total_steps: int = 10000
+    midpoint_frac: float = 0.5
+    wd_phase1: float = 0.1
+    wd_phase2: float = 0.0
+
+    @property
+    def mid(self) -> int:
+        return int(self.total_steps * self.midpoint_frac)
+
+    def lr(self, step: Array) -> Array:
+        s = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * s / max(self.warmup_steps, 1)
+        mid = float(self.mid)
+        # phase 1: linear peak -> phase2_lr at midpoint
+        p1 = self.peak_lr + (self.phase2_lr - self.peak_lr) * (
+            (s - self.warmup_steps) / jnp.maximum(mid - self.warmup_steps, 1.0)
+        )
+        # phase 2: linear phase2_lr -> final_lr at end
+        p2 = self.phase2_lr + (self.final_lr - self.phase2_lr) * (
+            (s - mid) / jnp.maximum(self.total_steps - mid, 1.0)
+        )
+        out = jnp.where(s < self.warmup_steps, warm, jnp.where(s < mid, p1, p2))
+        return jnp.maximum(out, 0.0)
+
+    def wd(self, step: Array) -> Array:
+        s = jnp.asarray(step, jnp.float32)
+        return jnp.where(s < self.mid, self.wd_phase1, self.wd_phase2)
+
+
+@dataclasses.dataclass(frozen=True)
+class CosineSchedule:
+    """Baseline (FP16) schedule: warmup + cosine decay, constant WD."""
+
+    peak_lr: float = 3e-4
+    final_lr: float = 3e-5
+    warmup_steps: int = 500
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+
+    def lr(self, step: Array) -> Array:
+        s = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * s / max(self.warmup_steps, 1)
+        t = (s - self.warmup_steps) / jnp.maximum(
+            self.total_steps - self.warmup_steps, 1.0
+        )
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = self.final_lr + 0.5 * (self.peak_lr - self.final_lr) * (
+            1.0 + jnp.cos(jnp.pi * t)
+        )
+        return jnp.where(s < self.warmup_steps, warm, cos)
+
+    def wd(self, step: Array) -> Array:
+        return jnp.full_like(jnp.asarray(step, jnp.float32), self.weight_decay)
+
+
+def schedule_for_mode(quant_mode: str, total_steps: int, peak_lr: float | None = None):
+    if quant_mode == "none":
+        return CosineSchedule(
+            total_steps=total_steps, peak_lr=peak_lr or 3e-4,
+            warmup_steps=min(500, max(10, total_steps // 20)),
+        )
+    return TwoPhaseSchedule(
+        total_steps=total_steps, peak_lr=peak_lr or 1.5e-3,
+        warmup_steps=min(500, max(10, total_steps // 20)),
+    )

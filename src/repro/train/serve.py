@@ -1,0 +1,103 @@
+"""Serving: batched prefill + decode with sampling, and the serve_step the
+decode-shape dry-runs lower.
+
+Decode is the paper's headline efficiency case (W1A8 GEMV is bandwidth
+bound; 1-bit weights cut weight traffic 16x) — the packed-weight Pallas
+path (repro.kernels.ops) is used on TPU; CPU examples run the fake-quant
+path for identical numerics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+Array = jax.Array
+
+
+def make_serve_step(cfg: ModelConfig):
+    """decode_step(params, tokens, caches, pos) -> (logits, caches).
+
+    This is what decode_32k / long_500k cells lower: one new token against a
+    KV cache of seq_len."""
+
+    def serve_step(params, tokens, caches, pos):
+        return api.decode_step(params, tokens, caches, pos, cfg)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, cfg, cache_len)
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Sampling loop (examples/serve_lm.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SamplerConfig:
+    temperature: float = 0.8
+    top_k: int = 40
+    max_new_tokens: int = 32
+
+
+def sample_token(key: Array, logits: Array, scfg: SamplerConfig) -> Array:
+    """logits (B, V) -> (B,) int32."""
+    if scfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / scfg.temperature
+    if scfg.top_k > 0 and scfg.top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, scfg.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class BatchedServer:
+    """Fixed-batch serving engine: prefill a batch of prompts, then decode
+    them in lockstep (the paper's batched-requests scenario)."""
+
+    def __init__(self, params, cfg: ModelConfig, max_len: int):
+        self.params, self.cfg, self.max_len = params, cfg, max_len
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self._decode = jax.jit(make_serve_step(cfg))
+        self._sample = jax.jit(
+            lambda key, logits, t, k: sample_token(
+                key, logits, SamplerConfig(temperature=t, top_k=k)
+            ),
+            static_argnums=(2, 3),
+        )
+
+    def generate(
+        self,
+        prompts: Array,  # (B, S) int32, right-aligned equal-length prompts
+        scfg: SamplerConfig = SamplerConfig(),
+        extra_inputs: Optional[dict] = None,
+        seed: int = 0,
+    ) -> np.ndarray:
+        b, s = prompts.shape
+        batch = {"tokens": prompts, **(extra_inputs or {})}
+        logits, caches = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        pos_off = self.cfg.n_image_tokens if (extra_inputs and "image_embeds" in extra_inputs) else 0
+        tok = None
+        for i in range(scfg.max_new_tokens):
+            key, sub = jax.random.split(key)
+            tok = self._sample(sub, logits if i == 0 else logits[:, 0],
+                               scfg.temperature, scfg.top_k)
+            out.append(np.asarray(tok))
+            pos = jnp.asarray(s + pos_off + i, jnp.int32)
+            logits, caches = self._decode(self.params, tok[:, None], caches, pos)
+        return np.stack(out, axis=1)  # (B, new_tokens)

@@ -1,0 +1,222 @@
+"""Training loop: QAT train_step (pjit-ready), gradient accumulation,
+checkpoint/restart, and the single-host Trainer used by examples/.
+
+train_step semantics (paper §3.1 / Appendix B): latent master weights are
+FP32; the forward pass casts to the model dtype (bf16) and fake-quantizes
+(weights 1-bit / INT8, activations INT8) with STE gradients; AdamW with the
+two-phase LR/WD schedule updates the FP32 latents.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_state_axes,
+    adamw_update,
+    init_adamw,
+)
+from repro.optim.schedule import schedule_for_mode
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(key: Array, cfg: ModelConfig) -> tuple[TrainState, Any]:
+    """Returns (state, state_axes) — axes mirror the state for sharding."""
+    params, axes = api.init_model(key, cfg)
+    state = TrainState(params=params, opt=init_adamw(params))
+    state_axes = TrainState(params=axes, opt=adamw_state_axes(axes))
+    return state, state_axes
+
+
+def train_state_shape_and_axes(cfg: ModelConfig):
+    """ShapeDtypeStructs + axes without allocation (dry-run path)."""
+    axes_box = {}
+
+    def f(key):
+        state, state_axes = init_train_state(key, cfg)
+        axes_box["axes"] = state_axes
+        return state
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, axes_box["axes"]
+
+
+def cast_for_forward(params, dtype):
+    """Latent FP32 master -> model dtype for the quantized forward pass."""
+    if dtype == jnp.float32:
+        return params
+
+    def cast(p):
+        return p.astype(dtype) if p.dtype == jnp.float32 else p
+
+    return jax.tree.map(cast, params)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    total_steps: int,
+    accum: int = 1,
+    adamw_cfg: AdamWConfig = AdamWConfig(),
+    peak_lr: Optional[float] = None,
+) -> Callable:
+    """Build the (jit-able) train_step(state, batch) -> (state, metrics).
+
+    ``accum`` > 1 splits the batch into microbatches scanned sequentially
+    with FP32 gradient accumulation (memory relief at fixed global batch).
+    """
+    sched = schedule_for_mode(cfg.quant.mode, total_steps, peak_lr)
+    model_dtype = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch):
+        fwd_params = cast_for_forward(params, model_dtype)
+        loss, metrics = api.loss_fn(fwd_params, batch, cfg)
+        return loss, metrics
+
+    def grads_one(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            return grads_one(params, batch)
+        # microbatch scan: leading batch dim must divide by accum
+        def split(x):
+            b = x.shape[0]
+            assert b % accum == 0, (b, accum)
+            return x.reshape(accum, b // accum, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, metrics, g = grads_one(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / accum, g_acc, g
+            )
+            return (loss_acc + loss / accum, g_acc), metrics
+
+        (loss, grads), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_g), micro
+        )
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        step = state.opt.step
+        lr = sched.lr(step)
+        wd = sched.wd(step)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, lr, wd, adamw_cfg
+        )
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "nll": metrics["nll"].astype(jnp.float32),
+            **opt_metrics,
+        }
+        return TrainState(params=new_params, opt=new_opt), out_metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Single-host Trainer (examples / paper-claim benchmarks)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 100
+    ckpt_dir: Optional[str] = None
+    accum: int = 1
+    seed: int = 0
+    peak_lr: Optional[float] = None
+    # fault tolerance: reload last checkpoint if loss goes non-finite
+    # (paper Fig. 10: BitNet needs this; pQuant shouldn't)
+    auto_recover: bool = True
+    # heartbeat file for the orchestrator's straggler/hang detection
+    heartbeat_path: Optional[str] = os.environ.get("REPRO_HEARTBEAT")
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, data_iter):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.data = data_iter
+        self.state, self.state_axes = init_train_state(
+            jax.random.PRNGKey(tcfg.seed), cfg
+        )
+        self.step_fn = jax.jit(
+            make_train_step(cfg, tcfg.total_steps, tcfg.accum, peak_lr=tcfg.peak_lr),
+            donate_argnums=(0,),
+        )
+        self.ckpt = Checkpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        self.history: list[dict] = []
+        self.recoveries = 0
+        self.start_step = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self._restore()
+
+    def _restore(self, step: Optional[int] = None):
+        restored = self.ckpt.restore(self.state._asdict(), step=step)
+        self.state = TrainState(**restored)
+        self.start_step = int(self.state.opt.step)
+
+    def run(self) -> list[dict]:
+        t_last = time.time()
+        for step, batch in self.data:
+            if step < self.start_step:
+                continue
+            if step >= self.tcfg.total_steps:
+                break
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.state, metrics = self.step_fn(self.state, jb)
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss) and self.tcfg.auto_recover and self.ckpt:
+                # fault path: reload last good checkpoint (paper Fig. 10)
+                self.recoveries += 1
+                self._restore()
+                continue
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = step
+            self.history.append(rec)
+            if self.tcfg.heartbeat_path:
+                with open(self.tcfg.heartbeat_path, "w") as hb:
+                    hb.write(str(step))
+            if step % self.tcfg.log_every == 0:
+                dt = time.time() - t_last
+                t_last = time.time()
+                print(
+                    f"step {step:5d} loss {rec['loss']:.4f} nll {rec['nll']:.4f} "
+                    f"lr {rec['lr']:.2e} gnorm {rec['grad_norm']:.2f} ({dt:.1f}s)"
+                )
+            if self.ckpt and step > 0 and step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step, self.state._asdict())
+        if self.ckpt:
+            self.ckpt.save(int(self.state.opt.step), self.state._asdict())
+            self.ckpt.wait()
+        return self.history

@@ -1,0 +1,140 @@
+"""Decoupled linear layer invariants (paper §3.2-3.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decoupled import (
+    decoupled_ffn,
+    decoupled_param_counts,
+    decoupled_proj,
+    init_decoupled_ffn,
+    init_decoupled_proj,
+    set_feature_scaling,
+)
+from repro.core.quantization import QuantConfig
+from repro.core.routing import RouterConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _x(b=2, s=8, d=32):
+    return jax.random.normal(jax.random.PRNGKey(7), (b, s, d))
+
+
+class TestStructure:
+    def test_r0_has_no_8bit_branch(self):
+        p, _ = init_decoupled_ffn(KEY, 32, 64, 0)
+        assert "w8_up" not in p and "alpha" not in p
+
+    def test_dff0_is_pure_8bit(self):
+        p, _ = init_decoupled_ffn(KEY, 32, 0, 16)
+        assert "w1_up" not in p and "w8_up" in p
+
+    def test_router_only_when_multi_expert(self):
+        p1, _ = init_decoupled_ffn(KEY, 32, 64, 16, num_experts=1)
+        p4, _ = init_decoupled_ffn(KEY, 32, 64, 16, num_experts=4)
+        assert "router" not in p1 and "router" in p4
+
+    def test_param_counts(self):
+        n1, n8 = decoupled_param_counts(32, 64, 16, 4, glu=True)
+        assert n1 == 3 * 32 * 64
+        assert n8 == 3 * 32 * 16 * 4
+
+
+class TestForward:
+    def test_output_finite_all_modes(self):
+        x = _x()
+        for mode in ("none", "bitnet", "bitnet158", "pquant"):
+            qc = QuantConfig(mode=mode, r=16 if mode == "pquant" else 0)
+            p, _ = init_decoupled_ffn(KEY, 32, 64, qc.r)
+            y, aux = decoupled_ffn(p, x, qc)
+            assert y.shape == x.shape
+            assert np.isfinite(np.asarray(y)).all(), mode
+
+    def test_feature_scaling_scales_8bit_branch(self):
+        """alpha multiplies the 8-bit output exactly (Eq. 11 linearity)."""
+        qc = QuantConfig(mode="pquant", r=16)
+        x = _x()
+        p, _ = init_decoupled_ffn(KEY, 32, 0, 16)  # pure 8-bit branch
+        y1, _ = decoupled_ffn(set_feature_scaling(dict(p), 1.0, 0.2), x, qc)
+        y2, _ = decoupled_ffn(set_feature_scaling(dict(p), 2.0, 0.2), x, qc)
+        np.testing.assert_allclose(
+            np.asarray(y2), 2 * np.asarray(y1), rtol=1e-4, atol=1e-5
+        )
+
+    def test_branch_sum(self):
+        """Full output == beta*branch1 + alpha*branch8 (paper Eq. 11)."""
+        qc = QuantConfig(mode="pquant", r=16)
+        p, _ = init_decoupled_ffn(KEY, 32, 64, 16, alpha_init=2.0, beta_init=0.2)
+        x = _x()
+        y, _ = decoupled_ffn(p, x, qc)
+        p1 = {k: v for k, v in p.items() if not k.startswith("w8") and k not in ("alpha", "beta")}
+        y1, _ = decoupled_ffn(p1, x, qc)  # beta defaults to 1 w/o 8-bit
+        p8 = {k: v for k, v in p.items() if not k.startswith("w1")}
+        p8 = set_feature_scaling(dict(p8), 1.0, 0.0)
+        y8, _ = decoupled_ffn(p8, x, qc)
+        np.testing.assert_allclose(
+            np.asarray(y), 0.2 * np.asarray(y1) + 2.0 * np.asarray(y8),
+            rtol=1e-3, atol=1e-4,
+        )
+
+    def test_routed_aux_loss_nonzero(self):
+        qc = QuantConfig(mode="pquant", r=16, num_experts=4)
+        p, _ = init_decoupled_ffn(KEY, 32, 64, 16, num_experts=4)
+        y, aux = decoupled_ffn(
+            p, _x(), qc, router_cfg=RouterConfig(num_experts=4, top_k=1)
+        )
+        assert float(aux) > 0
+
+    def test_gradients_reach_every_param(self):
+        qc = QuantConfig(mode="pquant", r=16, num_experts=2)
+        p, _ = init_decoupled_ffn(KEY, 32, 64, 16, num_experts=2)
+        x = _x()
+
+        def loss(p):
+            y, aux = decoupled_ffn(
+                p, x, qc, router_cfg=RouterConfig(num_experts=2, top_k=1)
+            )
+            return jnp.mean(y**2) + aux
+
+        g = jax.grad(loss)(p)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]:
+            assert np.isfinite(np.asarray(leaf)).all(), path
+            assert float(jnp.abs(leaf).sum()) > 0, f"dead gradient at {path}"
+
+    def test_alpha_gradient_dominates_beta_at_init(self):
+        """alpha >> beta init biases gradient flow to the 8-bit branch —
+        the mechanism the paper relies on (§3.2)."""
+        qc = QuantConfig(mode="pquant", r=32)
+        p, _ = init_decoupled_ffn(KEY, 32, 64, 32, alpha_init=2.0, beta_init=0.2)
+        x = _x()
+
+        def loss(p):
+            y, _ = decoupled_ffn(p, x, qc)
+            return jnp.mean(y**2)
+
+        g = jax.grad(loss)(p)
+        g8 = float(jnp.abs(g["w8_up"]).mean())
+        g1 = float(jnp.abs(g["w1_up"]).mean())
+        assert g8 > g1  # stronger feedback into the high-precision branch
+
+
+class TestDecoupledProj:
+    def test_forward_and_grads(self):
+        qc = QuantConfig(mode="pquant", r=8)
+        p, a = init_decoupled_proj(KEY, 32, 48, 8)
+        x = _x()
+        y, aux = decoupled_proj(p, x, qc)
+        assert y.shape == (2, 8, 48)
+        g = jax.grad(lambda p: jnp.mean(decoupled_proj(p, x, qc)[0] ** 2))(p)
+        assert float(jnp.abs(g["w8_a"]).sum()) > 0
+
+    def test_routed(self):
+        qc = QuantConfig(mode="pquant", r=8, num_experts=4)
+        p, _ = init_decoupled_proj(KEY, 32, 48, 8, num_experts=4)
+        y, aux = decoupled_proj(
+            p, _x(), qc, router_cfg=RouterConfig(num_experts=4, top_k=1)
+        )
+        assert np.isfinite(np.asarray(y)).all()

@@ -1,0 +1,66 @@
+"""Bit-packing roundtrip + export invariants."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import (
+    export_bit_weight,
+    export_int8_weight,
+    model_weight_bytes,
+    pack_signs,
+    unpack_signs,
+)
+
+
+class TestPacking:
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(
+        hnp.arrays(
+            np.int8,
+            st.tuples(
+                st.integers(1, 16).map(lambda k: k * 8), st.integers(1, 24)
+            ),
+            elements=st.sampled_from([-1, 1]),
+        )
+    )
+    def test_roundtrip(self, signs):
+        packed = pack_signs(jnp.asarray(signs))
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == (signs.shape[0] // 8, signs.shape[1])
+        out = unpack_signs(packed)
+        np.testing.assert_array_equal(np.asarray(out), signs)
+
+    def test_sixteen_x_compression(self):
+        k, n = 1024, 512
+        signs = np.where(np.random.default_rng(0).random((k, n)) > 0.5, 1, -1)
+        packed = pack_signs(jnp.asarray(signs.astype(np.int8)))
+        assert packed.size == k * n // 8  # 1/16 of fp16 bytes
+
+    def test_export_dequant_error(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.standard_normal((256, 64)).astype(np.float32) * 0.02)
+        pw = export_bit_weight(w)
+        deq = np.asarray(pw.dequantize())
+        # dequantized weight is the AbsMean binarization of w
+        lam = float(jnp.mean(jnp.abs(w)))
+        np.testing.assert_allclose(np.abs(deq), lam, rtol=1e-5)
+        mu = float(jnp.mean(w))
+        np.testing.assert_array_equal(
+            np.sign(deq), np.where(np.asarray(w) - mu >= 0, 1.0, -1.0)
+        )
+
+    def test_export_int8(self):
+        w = jnp.asarray(np.random.default_rng(1).standard_normal((64, 64)) * 0.1)
+        pw = export_int8_weight(w)
+        err = np.abs(np.asarray(pw.dequantize()) - np.asarray(w)).max()
+        assert err <= float(1.0 / pw.scale) * 0.51 + 1e-6
+
+    def test_memory_model_top1_read_invariance(self):
+        """paper §4.5: read bytes constant in N (only one branch active)."""
+        base = model_weight_bytes(1_000_000, 50_000, 10_000, seq_active_8bit=50_000)
+        grown = model_weight_bytes(1_000_000, 8 * 50_000, 10_000, seq_active_8bit=50_000)
+        assert base["read_bytes"] == grown["read_bytes"]
+        assert grown["stored_bytes"] > base["stored_bytes"]

@@ -1,0 +1,176 @@
+"""Unit + property tests for the quantizers (paper Eq. 3-9)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import (
+    INT8_QMAX,
+    QuantConfig,
+    binarize_weights,
+    binarize_weights_channelwise,
+    binarize_weights_grouped,
+    binarize_weights_stacked,
+    effective_bits,
+    fake_quant_linear_weights,
+    quantize_activations_int8,
+    quantize_weights_int8,
+    ste_round,
+    ste_sign,
+    ternarize_weights,
+)
+
+SETTINGS = hypothesis.settings(max_examples=30, deadline=None)
+
+floats_2d = hnp.arrays(
+    np.float32,
+    hnp.array_shapes(min_dims=2, max_dims=2, min_side=2, max_side=32),
+    elements=st.floats(-10, 10, width=32, allow_nan=False),
+)
+
+
+class TestBinarize:
+    def test_two_level(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        wq, lam = binarize_weights(w)
+        vals = np.unique(np.asarray(wq))
+        assert len(vals) <= 2
+        np.testing.assert_allclose(np.abs(vals), float(lam), rtol=1e-6)
+
+    def test_lambda_is_absmean(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+        _, lam = binarize_weights(w)
+        np.testing.assert_allclose(
+            float(lam), float(jnp.mean(jnp.abs(w))), rtol=1e-4
+        )
+
+    def test_sign_follows_centered_weight(self):
+        w = jnp.asarray([[3.0, -1.0], [0.5, -2.5]])
+        wq, lam = binarize_weights(w)
+        mu = float(jnp.mean(w))
+        expect = np.where(np.asarray(w) - mu >= 0, 1.0, -1.0) * float(lam)
+        np.testing.assert_allclose(np.asarray(wq), expect, rtol=1e-6)
+
+    @SETTINGS
+    @hypothesis.given(floats_2d)
+    def test_property_levels_and_scale(self, w):
+        hypothesis.assume(np.abs(w).sum() > 1e-3)
+        wq, lam = binarize_weights(jnp.asarray(w))
+        wq = np.asarray(wq)
+        assert np.all(np.isfinite(wq))
+        # exactly +-lambda
+        np.testing.assert_allclose(np.abs(wq), float(lam), rtol=1e-5)
+
+    def test_ste_gradient_is_identity_like(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (8, 8))
+        g = jax.grad(lambda w: jnp.sum(binarize_weights(w)[0] * 3.0))(w)
+        # d/dw [ste(sign)*lam] ~ contributions from both sign (identity) and
+        # lam (mean |w|) paths; must be finite and nonzero
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.abs(g).sum()) > 0
+
+    def test_stacked_matches_per_slice(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (4, 16, 8))
+        wq_st, lam_st = binarize_weights_stacked(w)
+        for i in range(4):
+            wq_i, lam_i = binarize_weights(w[i])
+            np.testing.assert_allclose(
+                np.asarray(wq_st[i]), np.asarray(wq_i), rtol=1e-6
+            )
+
+    def test_grouped_shapes_and_levels(self):
+        w = jax.random.normal(jax.random.PRNGKey(4), (8, 64))
+        wq, lam = binarize_weights_grouped(w, group_size=16)
+        assert wq.shape == w.shape
+        assert lam.shape == (8, 4)
+
+    def test_channelwise(self):
+        w = jax.random.normal(jax.random.PRNGKey(5), (32, 8))
+        wq, lam = binarize_weights_channelwise(w)
+        assert lam.shape == (8,)
+        for j in range(8):
+            col = np.unique(np.abs(np.asarray(wq[:, j])))
+            np.testing.assert_allclose(col, float(lam[j]), rtol=1e-5)
+
+
+class TestTernary:
+    def test_three_levels(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+        wq, lam = ternarize_weights(w)
+        vals = np.unique(np.round(np.asarray(wq / lam)).astype(int))
+        assert set(vals.tolist()) <= {-1, 0, 1}
+
+    def test_zero_preserved(self):
+        w = jnp.zeros((4, 4))
+        wq, _ = ternarize_weights(w)
+        np.testing.assert_array_equal(np.asarray(wq), 0.0)
+
+
+class TestActivationQuant:
+    def test_grid_alignment(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 128)) * 3
+        xq, gamma = quantize_activations_int8(x)  # gamma keeps dims: (4, 1)
+        # dequantized values land on the int8 grid
+        grid = np.asarray(xq * gamma)
+        np.testing.assert_allclose(grid, np.round(grid), atol=1e-3)
+        assert np.abs(grid).max() <= INT8_QMAX + 1e-3
+
+    def test_per_token_scale(self):
+        x = jnp.stack([jnp.ones(16) * 0.1, jnp.ones(16) * 100.0])
+        _, gamma = quantize_activations_int8(x)
+        assert float(gamma[0, 0]) > float(gamma[1, 0])
+
+    @SETTINGS
+    @hypothesis.given(floats_2d)
+    def test_property_bounded_error(self, x):
+        hypothesis.assume(np.abs(x).max() > 1e-3)
+        xj = jnp.asarray(x)
+        xq, gamma = quantize_activations_int8(xj)
+        # max error bounded by half a quantization step per token
+        step = 1.0 / np.asarray(gamma)  # (M, 1)
+        err = np.abs(np.asarray(xq) - x)
+        assert (err <= 0.51 * step + 1e-5).all()
+
+    def test_idempotent(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+        xq, _ = quantize_activations_int8(x)
+        xqq, _ = quantize_activations_int8(xq)
+        np.testing.assert_allclose(np.asarray(xq), np.asarray(xqq), atol=1e-2)
+
+
+class TestSTE:
+    def test_ste_round_grad(self):
+        g = jax.grad(lambda x: jnp.sum(ste_round(x * 2.0)))(jnp.ones(4))
+        np.testing.assert_allclose(np.asarray(g), 2.0)
+
+    def test_ste_sign_values(self):
+        x = jnp.asarray([-1.5, 0.0, 2.0])
+        np.testing.assert_array_equal(np.asarray(ste_sign(x)), [-1.0, 1.0, 1.0])
+
+
+class TestConfig:
+    def test_mode_dispatch(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+        assert np.allclose(
+            np.asarray(fake_quant_linear_weights(w, QuantConfig(mode="none"))),
+            np.asarray(w),
+        )
+        w1 = fake_quant_linear_weights(w, QuantConfig(mode="bitnet"))
+        assert len(np.unique(np.asarray(w1))) <= 2
+        w158 = fake_quant_linear_weights(w, QuantConfig(mode="bitnet158"))
+        assert len(np.unique(np.asarray(w158))) <= 3
+
+    def test_effective_bits_matches_paper_scale(self):
+        # paper: ~95% 1-bit + ~5% 8-bit linear weights -> ~1.35 bits
+        bits = effective_bits(950, 50, 0)
+        assert 1.2 < bits < 1.5
+
+    def test_int8_weight_quant(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+        wq, scale = quantize_weights_int8(w)
+        q = np.asarray(wq * scale)
+        np.testing.assert_allclose(q, np.round(q), atol=1e-3)

@@ -1,0 +1,81 @@
+"""Sort-based top-k dispatch properties."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import (
+    RouterConfig,
+    combine_scatter,
+    dispatch_gather,
+    expert_capacity,
+    route_and_apply,
+    init_router,
+    topk_dispatch,
+)
+
+
+def _probs(t, n, seed=0):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, n))
+    return jax.nn.softmax(logits, -1)
+
+
+class TestDispatch:
+    def test_identity_roundtrip(self):
+        """gather->identity->scatter with weight 1 reproduces kept tokens."""
+        t, n, d = 32, 4, 8
+        cfg = RouterConfig(num_experts=n, top_k=1, capacity_factor=4.0)
+        probs = _probs(t, n)
+        disp = topk_dispatch(probs, cfg)
+        disp["combine_weight"] = (disp["combine_weight"] > 0).astype(jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+        xe = dispatch_gather(x, disp)
+        y = combine_scatter(xe, disp, t)
+        # with generous capacity nothing is dropped
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+    def test_no_slot_collisions(self):
+        t, n = 64, 8
+        cfg = RouterConfig(num_experts=n, top_k=2, capacity_factor=2.0)
+        disp = topk_dispatch(_probs(t, n), cfg)
+        buf = np.asarray(disp["buffer_token"])
+        used = buf[buf < t]
+        # each expert slot holds at most one (token, slot) pair
+        pairs = [(e, s) for e in range(n) for s in range(buf.shape[1]) if buf[e, s] < t]
+        assert len(pairs) == len(set(pairs))
+
+    def test_capacity_drops_lowest_ranked(self):
+        t, n = 64, 2
+        cfg = RouterConfig(num_experts=n, top_k=1, capacity_factor=0.25)
+        disp = topk_dispatch(_probs(t, n), cfg)
+        kept = (np.asarray(disp["combine_weight"]) > 0).sum()
+        cap = expert_capacity(t, cfg)
+        assert kept <= n * cap
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        t=st.sampled_from([16, 33, 64]),
+        n=st.sampled_from([2, 4, 7]),
+        k=st.sampled_from([1, 2]),
+        seed=st.integers(0, 5),
+    )
+    def test_property_combine_weights_valid(self, t, n, k, seed):
+        hypothesis.assume(k <= n)
+        cfg = RouterConfig(num_experts=n, top_k=k)
+        disp = topk_dispatch(_probs(t, n, seed), cfg)
+        cw = np.asarray(disp["combine_weight"])
+        assert (cw >= 0).all() and (cw <= 1.0 + 1e-6).all()
+        ei = np.asarray(disp["expert_index"])
+        assert (ei >= 0).all() and (ei < n).all()
+
+    def test_route_and_apply_shapes(self):
+        t, n, d = 40, 4, 16
+        rp, _ = init_router(jax.random.PRNGKey(0), d, RouterConfig(num_experts=n))
+        x = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+        y, aux = route_and_apply(
+            rp, x, RouterConfig(num_experts=n, top_k=1), lambda xe: xe * 2.0
+        )
+        assert y.shape == (t, d)
+        assert np.isfinite(float(aux))

@@ -1,0 +1,79 @@
+"""Sensitivity analysis / parameter-democratization metric tests (paper
+§2.3, Figures 2 & 5a)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import binarize_weights
+from repro.core.sensitivity import (
+    democratization_score,
+    input_hessian,
+    max_pool_2d,
+    obs_sensitivity,
+    sensitivity_kurtosis,
+    top_fraction_mass,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestOBS:
+    def test_shapes(self):
+        w = jax.random.normal(KEY, (32, 16))
+        x = jax.random.normal(KEY, (128, 32))
+        s = obs_sensitivity(w, x)
+        assert s.shape == w.shape
+        assert (np.asarray(s) >= 0).all()
+
+    def test_larger_weight_more_sensitive(self):
+        """With isotropic inputs, sensitivity ~ w^2."""
+        x = jax.random.normal(KEY, (4096, 16))
+        w = jnp.zeros((16, 4)).at[0, 0].set(5.0).at[1, 1].set(0.1)
+        s = np.asarray(obs_sensitivity(w, x))
+        assert s[0, 0] > s[1, 1] * 100
+
+    def test_hessian_dampened_invertible(self):
+        # rank-deficient inputs still produce a usable Hessian
+        x = jnp.ones((64, 8))
+        h = input_hessian(x)
+        assert np.isfinite(np.linalg.inv(np.asarray(h))).all()
+
+
+class TestDemocratization:
+    def test_uniform_vs_peaked(self):
+        uniform = jnp.ones((64, 64))
+        peaked = jnp.ones((64, 64)).at[0, 0].set(1e6)
+        assert float(democratization_score(uniform)) > 0.999
+        assert float(democratization_score(peaked)) < 0.5
+
+    def test_1bit_weights_are_democratized(self):
+        """The paper's core observation: binarized weights flatten the
+        sensitivity landscape vs their FP latents."""
+        w = jax.random.normal(KEY, (64, 32)) * jnp.exp(
+            jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        )  # heavy-tailed FP weights
+        x = jax.random.normal(KEY, (512, 64))
+        s_fp = democratization_score(obs_sensitivity(w, x))
+        wq, _ = binarize_weights(w)
+        s_1b = democratization_score(obs_sensitivity(wq, x))
+        assert float(s_1b) > float(s_fp)
+
+    def test_top_fraction_mass(self):
+        peaked = jnp.ones((100, 10)).at[0, 0].set(1e6)
+        assert float(top_fraction_mass(peaked, 0.01)) > 0.9
+        assert float(top_fraction_mass(jnp.ones((100, 10)), 0.01)) < 0.05
+
+    def test_kurtosis_differentiates(self):
+        rng = jax.random.PRNGKey(2)
+        # minority of extreme outliers -> heavy-tailed log-sensitivity
+        heavy = jnp.ones((64, 64)).at[:2].set(1e8)
+        flat = jnp.ones((64, 64)) + 0.01 * jax.random.normal(rng, (64, 64))
+        assert float(sensitivity_kurtosis(heavy)) > float(sensitivity_kurtosis(flat))
+
+
+def test_max_pool_vis():
+    s = jnp.arange(64.0).reshape(8, 8)
+    p = max_pool_2d(s, (2, 2))
+    assert p.shape == (2, 2)
+    assert float(p[1, 1]) == 63.0

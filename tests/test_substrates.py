@@ -1,0 +1,183 @@
+"""Optimizer, schedule, checkpoint, data pipeline, tokenizer tests."""
+
+import os
+import tempfile
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import (
+    DataConfig,
+    PrefetchIterator,
+    SyntheticSource,
+    TextFileSource,
+    host_batch,
+)
+from repro.data.tokenizer import BPETokenizer, ByteTokenizer
+from repro.optim.adamw import AdamWConfig, adamw_update, global_norm, init_adamw
+from repro.optim.schedule import CosineSchedule, TwoPhaseSchedule, schedule_for_mode
+
+
+class TestSchedule:
+    def test_two_phase_shape(self):
+        s = TwoPhaseSchedule(total_steps=1000, warmup_steps=50)
+        # warmup rises
+        assert float(s.lr(10)) < float(s.lr(49))
+        # drop at midpoint (the paper's S-curve loss driver)
+        assert float(s.lr(499)) > float(s.lr(501))
+        # wd switches off in phase 2
+        assert float(s.wd(100)) == pytest.approx(0.1)
+        assert float(s.wd(600)) == 0.0
+
+    def test_monotone_decay_within_phases(self):
+        s = TwoPhaseSchedule(total_steps=1000, warmup_steps=50)
+        lrs = [float(s.lr(t)) for t in range(51, 499, 50)]
+        assert all(a >= b for a, b in zip(lrs, lrs[1:]))
+
+    def test_cosine_for_fp16(self):
+        s = schedule_for_mode("none", 1000)
+        assert isinstance(s, CosineSchedule)
+        assert float(s.wd(700)) == pytest.approx(0.1)
+
+    def test_quant_modes_get_two_phase(self):
+        for mode in ("pquant", "bitnet", "bitnet158"):
+            assert isinstance(schedule_for_mode(mode, 100), TwoPhaseSchedule)
+
+
+class TestAdamW:
+    def _setup(self):
+        params = {"w": jnp.ones((8, 8)), "norm_scale": jnp.ones(8),
+                  "alpha": jnp.asarray(2.0)}
+        return params, init_adamw(params)
+
+    def test_descends_quadratic(self):
+        params, state = self._setup()
+        lr, wd = jnp.asarray(5e-2), jnp.asarray(0.0)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        l0 = float(loss(params))
+        for _ in range(40):  # Adam moves ~lr per step from |w|=1
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_update(g, state, params, lr, wd)
+        assert float(loss(params)) < l0 * 0.1
+
+    def test_no_decay_on_scalars_and_norms(self):
+        params, state = self._setup()
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        new, _, _ = adamw_update(zero_g, state, params, jnp.asarray(1e-2),
+                                 jnp.asarray(0.5))
+        # decayed: w; untouched by wd: norm_scale, alpha
+        assert float(jnp.abs(new["w"] - params["w"]).sum()) > 0
+        np.testing.assert_allclose(np.asarray(new["alpha"]), 2.0)
+        np.testing.assert_allclose(np.asarray(new["norm_scale"]), 1.0)
+
+    def test_clipping(self):
+        params, state = self._setup()
+        big_g = jax.tree.map(lambda p: jnp.full_like(p, 1e6), params)
+        _, _, m = adamw_update(big_g, state, params, jnp.asarray(1e-3),
+                               jnp.asarray(0.0), AdamWConfig(clip_norm=1.0))
+        assert float(m["grad_norm"]) > 1.0  # reported pre-clip
+
+
+class TestCheckpointer:
+    def test_roundtrip_and_retention(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=2)
+            tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                    "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+            for s in (1, 2, 3):
+                ck.save(s, tree, blocking=True)
+            assert ck.all_steps() == [2, 3]  # keep=2 retention
+            out = ck.restore(tree)
+            np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+            assert out["b"]["c"].dtype == jnp.bfloat16
+
+    def test_atomicity_no_tmp_left(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(5, {"x": jnp.ones(3)}, blocking=True)
+            assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+    def test_async_save(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(1, {"x": jnp.ones(3)}, blocking=False)
+            ck.wait()
+            assert ck.latest_step() == 1
+
+    def test_shape_mismatch_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(1, {"x": jnp.ones(3)}, blocking=True)
+            with pytest.raises(AssertionError):
+                ck.restore({"x": jnp.ones(4)})
+
+
+class TestData:
+    def test_determinism(self):
+        src = SyntheticSource(256, seed=3)
+        cfg = DataConfig(seq_len=32, global_batch=4)
+        b1 = host_batch(src, cfg, 7)
+        b2 = host_batch(src, cfg, 7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_host_shards_disjoint(self):
+        src = SyntheticSource(256, seed=3)
+        full = host_batch(src, DataConfig(seq_len=16, global_batch=4), 0)
+        h0 = host_batch(src, DataConfig(seq_len=16, global_batch=4,
+                                        host_count=2, host_index=0), 0)
+        h1 = host_batch(src, DataConfig(seq_len=16, global_batch=4,
+                                        host_count=2, host_index=1), 0)
+        np.testing.assert_array_equal(
+            np.concatenate([h0["tokens"], h1["tokens"]]), full["tokens"]
+        )
+
+    def test_labels_are_next_tokens(self):
+        src = SyntheticSource(256, seed=0)
+        b = host_batch(src, DataConfig(seq_len=16, global_batch=2), 0)
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+
+    def test_prefetch(self):
+        src = SyntheticSource(64, seed=0)
+        it = PrefetchIterator(src, DataConfig(seq_len=8, global_batch=2))
+        steps = [next(it)[0] for _ in range(3)]
+        it.close()
+        assert steps == [0, 1, 2]
+
+    def test_text_source(self, tmp_path):
+        p = tmp_path / "corpus.txt"
+        p.write_text("hello world, this is a tiny corpus for testing " * 20)
+        src = TextFileSource([str(p)])
+        b = host_batch(src, DataConfig(seq_len=16, global_batch=2), 0)
+        assert (b["tokens"] >= 0).all()
+
+
+class TestTokenizers:
+    def test_byte_roundtrip(self):
+        t = ByteTokenizer()
+        s = "héllo wörld ☺"
+        assert t.decode(t.encode(s)) == s
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(st.text(min_size=0, max_size=64))
+    def test_bpe_roundtrip_property(self, s):
+        tok = BPETokenizer.train([s + " the quick brown fox " * 3], vocab_size=280)
+        assert tok.decode(tok.encode(s)) == s
+
+    def test_bpe_compresses(self):
+        corpus = "the quick brown fox jumps over the lazy dog " * 50
+        tok = BPETokenizer.train([corpus], vocab_size=400)
+        byte_len = len(ByteTokenizer().encode(corpus))
+        bpe_len = len(tok.encode(corpus))
+        assert bpe_len < byte_len * 0.6
+
+    def test_persistence(self, tmp_path):
+        tok = BPETokenizer.train(["abcabcabc " * 10], vocab_size=270)
+        path = str(tmp_path / "tok.json")
+        tok.save(path)
+        tok2 = BPETokenizer.load(path)
+        assert tok2.encode("abcabc") == tok.encode("abcabc")

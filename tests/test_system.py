@@ -1,0 +1,176 @@
+"""End-to-end system behaviour: the paper's qualitative claims at CPU scale
+plus trainer fault-tolerance paths."""
+
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config, reduced
+from repro.core.quantization import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticSource, host_batch
+from repro.train.trainer import (
+    Trainer,
+    TrainerConfig,
+    init_train_state,
+    make_train_step,
+)
+
+
+def _tiny(quant_mode="pquant", n_experts=1, **kw):
+    qc = QuantConfig(
+        mode=quant_mode,
+        r=16 if quant_mode == "pquant" else 0,
+        num_experts=n_experts,
+    )
+    base = dict(
+        name=f"tiny-{quant_mode}", family="decoder", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256, quant=qc,
+        max_seq_len=64,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _data_iter(cfg, steps, seq=32, batch=8, seed=0):
+    src = SyntheticSource(cfg.vocab_size, seed=seed)
+    dcfg = DataConfig(seq_len=seq, global_batch=batch, seed=seed)
+    for s in range(steps + 1):
+        yield s, host_batch(src, dcfg, s)
+
+
+def _train(cfg, steps=60, **tkw):
+    tcfg = TrainerConfig(total_steps=steps, log_every=1000, ckpt_every=10**9, **tkw)
+    tr = Trainer(cfg, tcfg, _data_iter(cfg, steps))
+    hist = tr.run()
+    return hist, tr
+
+
+class TestLearning:
+    def test_pquant_learns(self):
+        hist, _ = _train(_tiny("pquant"))
+        first = np.mean([h["nll"] for h in hist[:5]])
+        last = np.mean([h["nll"] for h in hist[-5:]])
+        assert last < first - 0.3, (first, last)
+
+    def test_all_modes_learn(self):
+        for mode in ("none", "bitnet", "bitnet158"):
+            hist, _ = _train(_tiny(mode), steps=40)
+            assert hist[-1]["nll"] < hist[0]["nll"], mode
+
+
+@pytest.mark.slow
+class TestPaperClaims:
+    """Scaled-down analogues of the paper's quantitative claims.
+
+    SCALE NOTE (recorded in EXPERIMENTS.md §Paper-claims): the paper's
+    quality advantage is demonstrated at 300M-2.6B params / 100B tokens.
+    At this harness's CPU scale (2 layers, d=64, <200 steps) the measured
+    deltas are ~0.08 NLL with BitNet slightly ahead across seeds — the
+    decoupled branch needs training scale to pay off (its mechanism, the
+    sensitivity differentiation, IS confirmed at this scale: see
+    bench_sensitivity).  These tests therefore assert a PARITY BAND
+    (pQuant within 0.15 NLL of the comparison), which catches real
+    regressions (broken STE, dead branches, routing bugs all blow the
+    band) without overclaiming scale effects CPU cannot reproduce.
+    """
+
+    def test_pquant_tracks_bitnet(self):
+        """Table 2 (parity band at CPU scale, see class docstring)."""
+        h_pq, _ = _train(_tiny("pquant"), steps=80)
+        h_bn, _ = _train(_tiny("bitnet"), steps=80)
+        pq = np.mean([h["nll"] for h in h_pq[-10:]])
+        bn = np.mean([h["nll"] for h in h_bn[-10:]])
+        assert pq < bn + 0.15, (pq, bn)
+
+    def test_feature_scaling_band(self):
+        """§4.6 ablation (parity band at CPU scale, see class docstring)."""
+        good = _tiny("pquant")
+        bad = dataclasses.replace(
+            good, quant=dataclasses.replace(good.quant, alpha_init=0.2,
+                                            beta_init=0.2),
+        )
+        h_good, _ = _train(good, steps=80)
+        h_bad, _ = _train(bad, steps=80)
+        g = np.mean([h["nll"] for h in h_good[-10:]])
+        b = np.mean([h["nll"] for h in h_bad[-10:]])
+        assert g < b + 0.15, (g, b)
+
+
+class TestFaultTolerance:
+    def test_resume_from_checkpoint(self):
+        cfg = _tiny("pquant")
+        with tempfile.TemporaryDirectory() as d:
+            tcfg = TrainerConfig(total_steps=20, ckpt_every=10, ckpt_dir=d,
+                                 log_every=1000)
+            tr = Trainer(cfg, tcfg, _data_iter(cfg, 20))
+            tr.run()
+            # "crash" and restart: new Trainer resumes past step 0
+            tcfg2 = TrainerConfig(total_steps=30, ckpt_every=10, ckpt_dir=d,
+                                  log_every=1000)
+            tr2 = Trainer(cfg, tcfg2, _data_iter(cfg, 30))
+            assert tr2.start_step >= 10
+            hist = tr2.run()
+            assert hist[0]["step"] >= 10
+
+    def test_elastic_restore_changes_nothing_numerically(self):
+        """Checkpoint stores logical arrays; restore works regardless of
+        sharding (single device here, multi-device covered in
+        test_distributed)."""
+        cfg = _tiny("pquant")
+        state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+        with tempfile.TemporaryDirectory() as d:
+            from repro.checkpoint.checkpointer import Checkpointer
+
+            ck = Checkpointer(d)
+            ck.save(3, state._asdict(), blocking=True)
+            out = ck.restore(state._asdict())
+            a = jax.tree.leaves(state.params)[0]
+            b = jax.tree.leaves(out["params"])[0]
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_auto_recovery_on_nan(self):
+        """Trainer reloads the last checkpoint when loss goes non-finite
+        (paper Fig. 10 behaviour: BitNet divergence -> rollback)."""
+        cfg = _tiny("pquant")
+        with tempfile.TemporaryDirectory() as d:
+            tcfg = TrainerConfig(total_steps=12, ckpt_every=5, ckpt_dir=d,
+                                 log_every=1000)
+            tr = Trainer(cfg, tcfg, _data_iter(cfg, 30))
+            orig = tr.step_fn
+            hits = {"n": 0}
+
+            def poisoned(state, batch):
+                state, m = orig(state, batch)
+                hits["n"] += 1
+                if hits["n"] == 8:  # one divergence event
+                    m = dict(m)
+                    m["loss"] = jnp.asarray(float("nan"))
+                return state, m
+
+            tr.step_fn = poisoned
+            hist = tr.run()
+            assert tr.recoveries == 1
+            assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+class TestGradAccum:
+    def test_accum_matches_full_batch(self):
+        cfg = _tiny("pquant")
+        state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+        src = SyntheticSource(cfg.vocab_size, seed=0)
+        batch = {
+            k: jnp.asarray(v)
+            for k, v in host_batch(src, DataConfig(seq_len=16, global_batch=8), 0).items()
+        }
+        s1, m1 = jax.jit(make_train_step(cfg, 10, accum=1))(state, batch)
+        s2, m2 = jax.jit(make_train_step(cfg, 10, accum=4))(state, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-3)
+        w1 = jax.tree.leaves(s1.params)[0]
+        w2 = jax.tree.leaves(s2.params)[0]
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=2e-2, atol=1e-5)
