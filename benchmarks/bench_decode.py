@@ -1,0 +1,114 @@
+"""Decode-path benchmark: Python per-token loop vs the compiled engine.
+
+Rows (``name,us_per_call,derived`` — us_per_call is per-TOKEN latency):
+  decode/python_loop          legacy loop (jitted step + host sync per token)
+  decode/engine               compiled prefill + lax.scan generation
+  decode/engine_stream        chunked streaming variant
+  decode/host_transfers       device->host transfers per engine call (== 1)
+  decode/gemv_tier            ops decode tier (fused act-quant w1a8_gemv)
+  decode/prefill_tier         same shape through the M-tiled prefill kernel
+
+The engine rows quantify what moving the loop on-device buys; the kernel
+rows what the decode-shaped GEMV tier buys over padding decode rows into
+prefill tiles.  ``--smoke`` runs a seconds-scale subset (no kernel
+micro-bench — interpret mode is not a timing signal) so CI exercises the
+whole path without TPU hardware.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench_kernel_tiers(rows, row, time_fn, m=4, k=512, n=512):
+    """Same decode shape through both ops tiers (TPU-meaningful numbers;
+    interpret mode on CPU is correctness-only)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    wp = jnp.asarray(rng.integers(0, 256, (k // 8, n)).astype(np.uint8))
+    lam = jnp.asarray(np.float32(0.05))
+
+    t_gemv = time_fn(
+        lambda: ops._bit_linear_decode(x, wp, lam, jnp.float32), warmup=1
+    )
+    t_pref = time_fn(
+        lambda: ops._bit_linear_prefill(x, wp, lam, jnp.float32), warmup=1
+    )
+    shape = f"m{m}_k{k}_n{n}"
+    rows.append(row(f"decode/gemv_tier_{shape}", t_gemv,
+                    f"speedup={t_pref / max(t_gemv, 1e-12):.2f}x"))
+    rows.append(row(f"decode/prefill_tier_{shape}", t_pref, ""))
+
+
+def run(smoke: bool = False, batch: int = 4, prompt_len: int = 16,
+        new_tokens: int | None = None, iters: int | None = None):
+    from benchmarks.common import row, time_fn, tiny_config
+    from repro.models import api
+    from repro.train.serve import BatchedServer, SamplerConfig
+
+    new_tokens = new_tokens or (8 if smoke else 48)
+    iters = iters or (1 if smoke else 3)
+    cfg = tiny_config(d_model=64, d_ff=128, n_layers=2, vocab=256)
+    params, _ = api.init_model(jax.random.PRNGKey(0), cfg)
+    server = BatchedServer(params, cfg, max_len=prompt_len + new_tokens + 1)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+    scfg = SamplerConfig(temperature=0.0, top_k=0, max_new_tokens=new_tokens)
+    toks_per_call = batch * new_tokens
+    timed = lambda fn: time_fn(fn, warmup=1, iters=iters)  # us per call
+    tok_s = lambda us: toks_per_call / (us * 1e-6)
+    rows = []
+
+    us_py = timed(lambda: server.generate_python_loop(prompts, scfg))
+    rows.append(row("decode/python_loop", us_py / new_tokens,
+                    f"tok_s={tok_s(us_py):.1f}"))
+
+    us_en = timed(lambda: server.generate(prompts, scfg))
+    rows.append(row(
+        "decode/engine", us_en / new_tokens,
+        f"tok_s={tok_s(us_en):.1f};speedup={us_py / us_en:.2f}x",
+    ))
+
+    us_st = timed(lambda: list(server.generate_stream(prompts, scfg, chunk=8)))
+    rows.append(row("decode/engine_stream", us_st / new_tokens,
+                    f"tok_s={tok_s(us_st):.1f}"))
+
+    before = server.engine.host_transfers
+    server.generate(prompts, scfg)
+    rows.append(row("decode/host_transfers", 0.0,
+                    f"per_call={server.engine.host_transfers - before}"))
+
+    if not smoke:
+        _bench_kernel_tiers(rows, row, time_fn)
+    return rows
+
+
+def main():
+    # allow `python benchmarks/bench_decode.py` from the repo root (siblings
+    # require `python -m benchmarks.run`)
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI subset")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, batch=args.batch, prompt_len=args.prompt_len,
+        new_tokens=args.new_tokens, iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

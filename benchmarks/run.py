@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §6):
   Table 8   -> bench_step_time     QAT step-time overhead
   Figure 10 -> bench_stability     divergence/spike counts at hot LR
   §Roofline -> bench_roofline      dry-run roofline terms per cell
+  §Decode   -> bench_decode        python loop vs compiled engine tok/s
 """
 
 import argparse
@@ -25,6 +26,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_decode,
         bench_kernels,
         bench_matched,
         bench_memory,
@@ -41,6 +43,7 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: bench_roofline.run(),
         "step_time": lambda: bench_step_time.run(),
+        "decode": lambda: bench_decode.run(),
         "quality": lambda: bench_quality.run(steps=args.steps),
         "scaling": lambda: bench_scaling.run(steps=args.steps),
         "matched": lambda: bench_matched.run(steps=args.steps),

@@ -3,15 +3,21 @@ sampling — the paper's edge-inference scenario (W1A8 weights, KV cache).
 
     PYTHONPATH=src python examples/serve_lm.py [--ckpt results/train100m/ckpt]
 
+Generation runs on the compiled decode engine (prefill + lax.scan + on-device
+sampling, one host transfer).  ``--compare`` also times the legacy per-token
+Python loop and prints the speedup; ``--stream`` prints tokens chunk by
+chunk as the engine produces them.
+
 Without --ckpt it serves a freshly initialised reduced model (tokens are
 synthetic ids); with a checkpoint from train_lm.py it decodes that model.
 """
 
 import argparse
+import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.registry import get_config, reduced
@@ -28,9 +34,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--compare", action="store_true",
+                    help="also time the legacy per-token Python loop")
+    ap.add_argument("--stream", action="store_true",
+                    help="stream tokens chunk by chunk")
+    ap.add_argument("--stream-chunk", type=int, default=8)
     args = ap.parse_args()
-
-    import dataclasses
 
     cfg = get_config(args.arch)
     if args.reduced or not args.ckpt:
@@ -51,20 +60,41 @@ def main():
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 3, cfg.vocab_size
     ).astype(jnp.int32)
-
-    import time
-
-    t0 = time.time()
-    out = server.generate(
-        prompts, SamplerConfig(temperature=0.8, top_k=40,
-                               max_new_tokens=args.new_tokens),
-    )
-    dt = time.time() - t0
+    scfg = SamplerConfig(temperature=0.8, top_k=40,
+                         max_new_tokens=args.new_tokens)
     toks = args.batch * args.new_tokens
+
+    if args.stream:
+        t0 = time.time()
+        chunks = []
+        for i, chunk in enumerate(server.generate_stream(
+                prompts, scfg, chunk=args.stream_chunk)):
+            chunks.append(chunk)
+            print(f"  chunk {i}: +{chunk.shape[1]} tokens "
+                  f"({time.time() - t0:.1f}s in)")
+        import numpy as np
+        out = np.concatenate(chunks, axis=1)
+    else:
+        t0 = time.time()
+        out = server.generate(prompts, scfg)
+    dt = time.time() - t0
     print(f"generated {out.shape} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s batched, incl. prefill + compile)")
     for i, row in enumerate(out[: min(4, args.batch)]):
         print(f"  request {i}: {row.tolist()}")
+
+    if args.compare:
+        # warm both paths, then time steady-state generation
+        server.generate(prompts, scfg)
+        server.generate_python_loop(prompts, scfg)
+        t0 = time.time()
+        server.generate_python_loop(prompts, scfg)
+        t_py = time.time() - t0
+        t0 = time.time()
+        server.generate(prompts, scfg)
+        t_en = time.time() - t0
+        print(f"python loop: {toks / t_py:.1f} tok/s | compiled engine: "
+              f"{toks / t_en:.1f} tok/s | speedup {t_py / t_en:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel tier for the pQuant integer serving path.
+
+Every kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` owns padding,
+CPU interpret fallback, and shape-keyed dispatch between the tiers.
+
+Kernel            | File                | Shape regime                  | How ops.py selects it
+------------------+---------------------+-------------------------------+----------------------------------------------
+w1a8_matmul       | w1a8_matmul.py      | prefill/train, M > 32         | bit_linear_infer, M > DECODE_M_MAX: M-tiled
+                  |                     |                               | (bm up to 128) grid, separate act-quant pass
+w1a8_gemv         | w1a8_gemv.py        | decode, M <= 32               | bit_linear_infer, M <= DECODE_M_MAX: act-quant
+                  |                     |                               | fused in prologue, (N, K)-major grid, wide bn;
+                  |                     |                               | tiles from decode_tiles / sweep_decode_tiles
+int8_matmul       | int8_matmul.py      | 8-bit branch, any M           | int8_linear_infer (W8A8 branch)
+decoupled_matmul  | decoupled_matmul.py | prefill/train dual-branch     | decoupled_first_gemm, M > DECODE_M_MAX
+decoupled_gemv    | w1a8_gemv.py        | decode dual-branch, M <= 32   | decoupled_first_gemm, M <= DECODE_M_MAX
+rmsnorm_quant     | rmsnorm_quant.py    | norm + act-quant, any M       | fused_rmsnorm_quant
+
+Decode-tier tile sizes are answered per (M, K, N) signature by
+``ops.decode_tiles`` (divisor heuristic) and can be autotuned on the
+current backend with ``ops.sweep_decode_tiles`` — the swept winner is
+cached and picked up by later calls with the same signature.
+"""

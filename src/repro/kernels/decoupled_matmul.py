@@ -101,13 +101,17 @@ def decoupled_matmul(
     assert r <= bn_, f"8-bit width {r} must fit one tile (bn={bn_})"
 
     ab = jnp.stack([alpha.astype(jnp.float32), beta.astype(jnp.float32)]).reshape(2)
+    nk = k // bk_
+    # w8 is only consumed on j == 0 passes; pin its block index at the last
+    # K tile for j > 0 so the pipeline re-streams it per i, not per (i, j).
+    w8_index = lambda i, j, kk: (jnp.where(j == 0, kk, nk - 1), 0)
     return pl.pallas_call(
         _decoupled_kernel,
-        grid=(m // bm_, n // bn_, k // bk_),
+        grid=(m // bm_, n // bn_, nk),
         in_specs=[
             pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk_ // 8, bn_), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk_, r), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((bk_, r), w8_index),
             pl.BlockSpec((bm_,), lambda i, j, kk: (i,)),
             pl.BlockSpec((1,), lambda i, j, kk: (0,)),
             pl.BlockSpec((1,), lambda i, j, kk: (0,)),

@@ -1,14 +1,28 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Handles: CPU fallback (interpret=True so the kernel *body* is executed and
-validated on CPU), ragged-shape padding to tile multiples, and the
+validated on CPU), ragged-shape padding to tile multiples, the
 quantize -> kernel -> output plumbing used by the serving path
-(``repro.train.serve`` W1A8 inference).
+(``repro.train.serve`` W1A8 inference), and shape-keyed dispatch between
+the prefill-tiled kernels and the decode GEMV tier:
+
+* M <= DECODE_M_MAX (decode/GEMV regime): route to ``w1a8_gemv`` /
+  ``decoupled_gemv`` — activation quantization fused into the kernel
+  prologue, M padded only to the 8-row sublane minimum, wide-bn (N, K)
+  grid for maximum packed-weight streaming.
+* M > DECODE_M_MAX (prefill/train regime): the existing M-tiled kernels
+  behind a separate ``quantize_act_int8`` pass.
+
+Tile sizes for the decode tier come from a per-(M, K, N) dispatch table:
+``decode_tiles`` answers from divisor heuristics, and ``sweep_decode_tiles``
+runs a timed sweep on the current backend and caches the winner under the
+same signature so later calls (and jit retraces) pick it up.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +31,22 @@ from repro.kernels import ref
 from repro.kernels.decoupled_matmul import decoupled_matmul
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.rmsnorm_quant import rmsnorm_quant
+from repro.kernels.w1a8_gemv import decoupled_gemv, w1a8_gemv
 from repro.kernels.w1a8_matmul import w1a8_matmul
 
 Array = jax.Array
+
+# Largest flattened row count routed to the decode GEMV tier.  Decode serves
+# one token per request, so M = batch; 32 covers the batched-decode regime
+# while anything larger amortizes like prefill.
+DECODE_M_MAX = 32
+
+# (op, m, k, n) -> (bk, bn): filled by sweep_decode_tiles; consulted before
+# the divisor heuristic so an autotuned signature sticks for the process.
+_DECODE_TILE_CACHE: dict[tuple, tuple[int, int]] = {}
+
+_BK_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
+_BN_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
 
 
 def on_tpu() -> bool:
@@ -34,6 +61,16 @@ def _pad_rows(x: Array, mult: int):
     return x, m
 
 
+def _pad_gamma(gamma: Array, mult: int) -> Array:
+    """Pad per-token scales with ONES, not zeros: kernel epilogues divide by
+    gamma, and a zero-padded row would compute 1/0 * 0 = NaN before the
+    [:m] slice drops it."""
+    pad = (-gamma.shape[0]) % mult
+    if pad:
+        gamma = jnp.pad(gamma, ((0, pad),), constant_values=1.0)
+    return gamma
+
+
 def quantize_act_int8(x: Array):
     """Per-token AbsMax INT8 (runtime, true-integer path)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -42,24 +79,158 @@ def quantize_act_int8(x: Array):
     return q.astype(jnp.int8), gamma
 
 
+# ---------------------------------------------------------------------------
+# Decode-tier tile dispatch / autotune
+# ---------------------------------------------------------------------------
+
+
+def _largest_divisor(total: int, candidates) -> int:
+    for c in candidates:
+        if c <= total and total % c == 0:
+            return c
+    return total
+
+
+def _tile_key(op: str, m: int, k: int, n: int, r: int | None):
+    # r is part of the decoupled signature: the same (m, k, n) with a
+    # different 8-bit branch width is a different kernel launch.
+    return (op, m, k, n) if r is None else (op, m, k, n, r)
+
+
+def decode_tiles(m: int, k: int, n: int, op: str = "w1a8_gemv",
+                 r: int | None = None):
+    """(bk, bn) for a decode-shaped call: autotuned entry if one was swept,
+    otherwise the widest candidate tiles that divide (K, N).  For the
+    decoupled op, bn always fits the 8-bit branch (bn >= r)."""
+    cached = _DECODE_TILE_CACHE.get(_tile_key(op, m, k, n, r))
+    if cached is not None:
+        return cached
+    bk = _largest_divisor(k, _BK_CANDIDATES)
+    bn = _largest_divisor(n, _BN_CANDIDATES)
+    if r is not None and bn < r:
+        wide = [c for c in _BN_CANDIDATES if c >= r and n % c == 0]
+        bn = min(wide) if wide else n
+    return bk, bn
+
+
+def sweep_decode_tiles(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    op: str = "w1a8_gemv",
+    r: int | None = None,
+    bk_candidates=None,
+    bn_candidates=None,
+    warmup: int = 1,
+    iters: int = 3,
+    seed: int = 0,
+):
+    """Time the decode kernel over candidate (bk, bn) tiles on the current
+    backend, cache the winner per (m, k, n[, r]) signature, and return it.
+
+    M is normalized to the 8-row padded shape the dispatcher actually
+    launches, so a sweep for batch 4 is found by the batch-4 inference call.
+    op selects the kernel: "w1a8_gemv" or "decoupled_gemv" (r = the 8-bit
+    branch width to sweep with).  The sweep runs whatever backend is active
+    (interpret on CPU, compiled on TPU) — call it once per decode signature
+    at server start-up; subsequent calls with that signature use the cache.
+    """
+    import numpy as np
+
+    if op == "decoupled_gemv" and r is None:
+        raise ValueError("decoupled_gemv sweeps need r (8-bit branch width)")
+    m_p = m + (-m) % 8  # the shape _bit_linear_decode pads to and looks up
+    key = _tile_key(op, m_p, k, n, r if op == "decoupled_gemv" else None)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m_p, k)).astype(np.float32))
+    wp = jnp.asarray(rng.integers(0, 256, (k // 8, n)).astype(np.uint8))
+    lam = jnp.asarray(np.float32(0.05))
+    interp = not on_tpu()
+    if op == "decoupled_gemv":
+        w8 = jnp.asarray(rng.integers(-127, 128, (k, r)).astype(np.int8))
+        scales = [jnp.asarray(np.float32(v)) for v in (2.0, 1.0, 1.0)]
+
+        def call(bk, bn):
+            return decoupled_gemv(
+                x, wp, w8, lam, *scales, bk=bk, bn=bn, interpret=interp
+            )[0]
+    else:
+        def call(bk, bn):
+            return w1a8_gemv(x, wp, lam, bk=bk, bn=bn, interpret=interp)
+
+    best, best_t = None, float("inf")
+    bks = [c for c in (bk_candidates or _BK_CANDIDATES)
+           if c % 8 == 0 and c <= k and k % c == 0]
+    bns = [c for c in (bn_candidates or _BN_CANDIDATES)
+           if c <= n and n % c == 0
+           and (op != "decoupled_gemv" or c >= r)]
+    for bk in bks:
+        for bn in bns:
+            try:
+                for _ in range(warmup):
+                    jax.block_until_ready(call(bk, bn))
+                ts = []
+                for _ in range(iters):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(call(bk, bn))
+                    ts.append(time.perf_counter() - t0)
+                t = min(ts)
+            except Exception:  # noqa: BLE001 — an invalid tile combo just loses
+                continue
+            if t < best_t:
+                best, best_t = (bk, bn), t
+    if best is None:
+        best = decode_tiles(m_p, k, n, op=op, r=r)
+    _DECODE_TILE_CACHE[key] = best
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Inference linears (shape-dispatched)
+# ---------------------------------------------------------------------------
+
+
+def _bit_linear_prefill(xf: Array, w_packed: Array, lam: Array, out_dtype):
+    """Prefill-tiled path: XLA act-quant pass + M-tiled w1a8_matmul."""
+    xq, gamma = quantize_act_int8(xf)
+    bm = 8 if xq.shape[0] <= 128 else 128
+    xq, m = _pad_rows(xq, bm)
+    gamma_p = _pad_gamma(gamma, bm)
+    y = w1a8_matmul(
+        xq, w_packed, gamma_p, lam,
+        bm=bm, out_dtype=out_dtype, interpret=not on_tpu(),
+    )
+    return y[:m]
+
+
+def _bit_linear_decode(xf: Array, w_packed: Array, lam: Array, out_dtype):
+    """Decode GEMV path: act-quant fused into the kernel prologue."""
+    xp, m = _pad_rows(xf, 8)
+    bk, bn = decode_tiles(xp.shape[0], xf.shape[1], w_packed.shape[1])
+    y = w1a8_gemv(
+        xp, w_packed, lam,
+        bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+    )
+    return y[:m]
+
+
 def bit_linear_infer(
     x: Array, w_packed: Array, lam: Array, out_dtype=jnp.bfloat16
 ) -> Array:
     """Full W1A8 inference linear: quantize acts -> packed 1-bit matmul.
 
     x: (..., K) float; w_packed: (K//8, N) uint8; lam: scalar.
+    Decode shapes (M <= DECODE_M_MAX flattened rows) take the fused GEMV
+    tier; larger M takes the prefill-tiled kernel.
     """
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
-    xq, gamma = quantize_act_int8(xf)
-    bm = 8 if xq.shape[0] <= 128 else 128
-    xq, m = _pad_rows(xq, bm)
-    gamma_p, _ = _pad_rows(gamma + (gamma == 0), bm)  # avoid 1/0 on pad rows
-    y = w1a8_matmul(
-        xq, w_packed, gamma_p, lam,
-        bm=bm, out_dtype=out_dtype, interpret=not on_tpu(),
-    )
-    return y[:m].reshape(*lead, -1)
+    if xf.shape[0] <= DECODE_M_MAX:
+        y = _bit_linear_decode(xf, w_packed, lam, out_dtype)
+    else:
+        y = _bit_linear_prefill(xf, w_packed, lam, out_dtype)
+    return y.reshape(*lead, -1)
 
 
 def int8_linear_infer(
@@ -71,7 +242,7 @@ def int8_linear_infer(
     xq, gamma = quantize_act_int8(xf)
     bm = 8 if xq.shape[0] <= 128 else 128
     xq, m = _pad_rows(xq, bm)
-    gamma_p, _ = _pad_rows(gamma + (gamma == 0), bm)
+    gamma_p = _pad_gamma(gamma, bm)
     y = int8_matmul(
         xq, w_q, gamma_p, wscale, bm=bm, out_dtype=out_dtype,
         interpret=not on_tpu(),
@@ -89,6 +260,35 @@ def fused_rmsnorm_quant(x: Array, scale: Array):
     return q[:m].reshape(*lead, -1), gamma[:m].reshape(lead)
 
 
+def _decoupled_prefill(
+    xf, w1_packed, w8_q, lam, w8scale, alpha, beta, out_dtype
+):
+    xq, gamma = quantize_act_int8(xf)
+    bm = 8 if xq.shape[0] <= 128 else 128
+    xq, m = _pad_rows(xq, bm)
+    gamma_p = _pad_gamma(gamma, bm)
+    r = w8_q.shape[1]
+    bn = max(256, r)
+    y1, y8 = decoupled_matmul(
+        xq, w1_packed, w8_q, gamma_p, lam, w8scale, alpha, beta,
+        bm=bm, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+    )
+    return y1[:m], y8[:m]
+
+
+def _decoupled_decode(
+    xf, w1_packed, w8_q, lam, w8scale, alpha, beta, out_dtype
+):
+    xp, m = _pad_rows(xf, 8)
+    k, n, r = xf.shape[1], w1_packed.shape[1], w8_q.shape[1]
+    bk, bn = decode_tiles(xp.shape[0], k, n, op="decoupled_gemv", r=r)
+    y1, y8 = decoupled_gemv(
+        xp, w1_packed, w8_q, lam, w8scale, alpha, beta,
+        bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+    )
+    return y1[:m], y8[:m]
+
+
 def decoupled_first_gemm(
     x: Array,
     w1_packed: Array,
@@ -102,17 +302,16 @@ def decoupled_first_gemm(
     """Fused dual-branch up-projection for serving: reads activations once.
 
     Returns (y1 (..., N), y8 (..., R)), each pre-scaled by beta / alpha.
+    Decode shapes route to the fused-act-quant ``decoupled_gemv``.
     """
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
-    xq, gamma = quantize_act_int8(xf)
-    bm = 8 if xq.shape[0] <= 128 else 128
-    xq, m = _pad_rows(xq, bm)
-    gamma_p, _ = _pad_rows(gamma + (gamma == 0), bm)
-    r = w8_q.shape[1]
-    bn = max(256, r)
-    y1, y8 = decoupled_matmul(
-        xq, w1_packed, w8_q, gamma_p, lam, w8scale, alpha, beta,
-        bm=bm, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
-    )
-    return y1[:m].reshape(*lead, -1), y8[:m].reshape(*lead, -1)
+    if xf.shape[0] <= DECODE_M_MAX:
+        y1, y8 = _decoupled_decode(
+            xf, w1_packed, w8_q, lam, w8scale, alpha, beta, out_dtype
+        )
+    else:
+        y1, y8 = _decoupled_prefill(
+            xf, w1_packed, w8_q, lam, w8scale, alpha, beta, out_dtype
+        )
+    return y1.reshape(*lead, -1), y8.reshape(*lead, -1)

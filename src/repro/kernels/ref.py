@@ -68,6 +68,43 @@ def rmsnorm_quant_ref(x: Array, scale: Array, eps: float = 1e-6):
     return q, gamma
 
 
+def quantize_act_ref(x: Array):
+    """Per-token AbsMax INT8 quantize (the XLA pass the GEMV tier fuses).
+
+    x: (M, K) float -> (q (M, K) int8, gamma (M,) f32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    gamma = 127.0 / (amax + 1e-5)
+    q = jnp.clip(jnp.round(xf * gamma[:, None]), -127, 127).astype(jnp.int8)
+    return q, gamma
+
+
+def w1a8_gemv_ref(
+    x: Array, w_packed: Array, lam: Array, out_dtype=jnp.float32
+) -> Array:
+    """Decode GEMV with fused act-quant: quantize_act_ref + w1a8_matmul_ref."""
+    xq, gamma = quantize_act_ref(x)
+    return w1a8_matmul_ref(xq, w_packed, gamma, lam, out_dtype=out_dtype)
+
+
+def decoupled_gemv_ref(
+    x: Array,
+    w1_packed: Array,
+    w8_i8: Array,
+    lam: Array,
+    w8scale: Array,
+    alpha: Array,
+    beta: Array,
+    out_dtype=jnp.float32,
+):
+    """Dual-branch decode GEMV reference (act-quant + decoupled_matmul_ref)."""
+    xq, gamma = quantize_act_ref(x)
+    return decoupled_matmul_ref(
+        xq, w1_packed, w8_i8, gamma, lam, w8scale, alpha, beta,
+        out_dtype=out_dtype,
+    )
+
+
 def decoupled_matmul_ref(
     x_i8: Array,
     w1_packed: Array,

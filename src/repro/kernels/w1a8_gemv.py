@@ -1,0 +1,251 @@
+"""Decode-shaped W1A8 GEMV Pallas kernels with fused activation quantization.
+
+Autoregressive decode multiplies a handful of token rows (M <= ~32) against
+the full packed weight matrix — the op is bandwidth-bound on the 1-bit
+weight stream, so the prefill-shaped ``w1a8_matmul`` tiling (M padded to
+128-row tiles, a separate XLA activation-quantize pass that round-trips the
+activations through HBM) leaves throughput on the table.  This tier is
+specialized for that regime:
+
+* **Fused act-quant prologue.**  The float activations (all M rows x full K)
+  fit in VMEM at decode shapes, so the kernel's first grid step computes the
+  per-token AbsMax INT8 quantization in-kernel (gamma + int8 rows land in
+  VMEM scratch) and every later step reads the quantized rows from scratch.
+  No ``quantize_act_int8`` XLA pass, no extra HBM round-trip.
+* **No 128-row padding.**  M is a single block (padded only to the 8-row
+  f32 sublane minimum in ops.py), not a grid dimension.
+* **(N, K)-major grid with wide bn tiles.**  The grid walks output tiles
+  j over N with K innermost, streaming wide packed-weight tiles HBM->VMEM —
+  the weight stream, the bandwidth term that matters, is maximized while
+  the tiny activation block stays resident.
+
+``decoupled_gemv`` is the dual-branch variant (paper §A third point): the
+8-bit branch tile rides along and both accumulators advance per K step, so
+the quantized activations are read once for the two GEMVs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.w1a8_matmul import _unpack_tile
+
+Array = jax.Array
+
+# Wider-than-prefill defaults: weight streaming dominates, so bn leans wide;
+# bk stays a multiple of 8 (packing) and of 128 (MXU lane) where shapes allow.
+DEFAULT_BK, DEFAULT_BN = 512, 512
+
+
+def _quant_prologue(x_ref, xq_ref, gamma_ref):
+    """Per-token AbsMax INT8 quantize of the full (bm, K) activation block
+    into VMEM scratch.  gamma = 127 / (amax + 1e-5) is never zero, so pad
+    rows (all-zero activations) stay finite through the epilogue."""
+    xf = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    gamma = 127.0 / (amax + 1e-5)
+    xq_ref[...] = jnp.clip(jnp.round(xf * gamma[:, None]), -127, 127).astype(
+        jnp.int8
+    )
+    gamma_ref[...] = gamma
+
+
+def _w1a8_gemv_kernel(
+    x_ref, wp_ref, lam_ref, o_ref, xq_ref, gamma_ref, acc_ref, *, bk: int
+):
+    """One (j, kk) grid step: j walks N tiles, kk walks K tiles (innermost)."""
+    j, kk = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((j == 0) & (kk == 0))
+    def _prologue():
+        _quant_prologue(x_ref, xq_ref, gamma_ref)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_tile = xq_ref[:, pl.dslice(kk * bk, bk)]
+    w_tile = _unpack_tile(wp_ref[...])
+    acc_ref[...] += jax.lax.dot_general(
+        x_tile,
+        w_tile,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(kk == pl.num_programs(1) - 1)
+    def _epilogue():
+        lam = lam_ref[0]
+        y = acc_ref[...].astype(jnp.float32) * (lam / gamma_ref[...])[:, None]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bk", "bn", "out_dtype", "interpret")
+)
+def w1a8_gemv(
+    x: Array,
+    w_packed: Array,
+    lam: Array,
+    *,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> Array:
+    """Y (M, N) = dequant(quantize(X) @ unpack(W_packed)), act-quant fused.
+
+    x: (M, K) float activations, M small (decode rows; pad to 8 in ops.py);
+    w_packed: (K//8, N) uint8 sign bits; lam: scalar AbsMean weight scale.
+    K % bk == 0 and N % bn == 0 (pick tiles via ops.decode_tiles).
+    """
+    m, k = x.shape
+    kb, n = w_packed.shape
+    assert kb * 8 == k, f"packed K mismatch: {kb}*8 != {k}"
+    bk_, bn_ = min(bk, k), min(bn, n)
+    assert bk_ % 8 == 0, f"bk={bk_} must be a multiple of 8 (packing)"
+    assert k % bk_ == 0 and n % bn_ == 0, (k, n, bk_, bn_)
+
+    return pl.pallas_call(
+        functools.partial(_w1a8_gemv_kernel, bk=bk_),
+        grid=(n // bn_, k // bk_),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j, kk: (0, 0)),  # resident in VMEM
+            pl.BlockSpec((bk_ // 8, bn_), lambda j, kk: (kk, j)),
+            pl.BlockSpec((1,), lambda j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, bn_), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m, k), jnp.int8),  # quantized rows
+            pltpu.VMEM((m,), jnp.float32),  # gamma
+            pltpu.VMEM((m, bn_), jnp.int32),  # accumulator
+        ],
+        interpret=interpret,
+    )(x, w_packed, lam.reshape(1).astype(jnp.float32))
+
+
+def _decoupled_gemv_kernel(
+    x_ref, wp_ref, w8_ref, lam_ref, w8s_ref, ab_ref,
+    o1_ref, o8_ref, xq_ref, gamma_ref, acc1_ref, acc8_ref, *, bk: int
+):
+    j, kk = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((j == 0) & (kk == 0))
+    def _prologue():
+        _quant_prologue(x_ref, xq_ref, gamma_ref)
+        acc8_ref[...] = jnp.zeros_like(acc8_ref)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+
+    x_tile = xq_ref[:, pl.dslice(kk * bk, bk)]
+    w1 = _unpack_tile(wp_ref[...])
+    acc1_ref[...] += jax.lax.dot_general(
+        x_tile, w1, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    # 8-bit branch: only the j == 0 pass accumulates (r fits one N tile)
+    @pl.when(j == 0)
+    def _acc8():
+        acc8_ref[...] += jax.lax.dot_general(
+            x_tile, w8_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    @pl.when(kk == pl.num_programs(1) - 1)
+    def _epilogue():
+        lam = lam_ref[0]
+        alpha, beta = ab_ref[0], ab_ref[1]
+        y1 = acc1_ref[...].astype(jnp.float32) * (
+            beta * lam / gamma_ref[...]
+        )[:, None]
+        o1_ref[...] = y1.astype(o1_ref.dtype)
+
+        @pl.when(j == 0)
+        def _write8():
+            inv8 = alpha / (gamma_ref[...] * w8s_ref[0])
+            y8 = acc8_ref[...].astype(jnp.float32) * inv8[:, None]
+            o8_ref[...] = y8.astype(o8_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bk", "bn", "out_dtype", "interpret")
+)
+def decoupled_gemv(
+    x: Array,
+    w1_packed: Array,
+    w8_i8: Array,
+    lam: Array,
+    w8scale: Array,
+    alpha: Array,
+    beta: Array,
+    *,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """Dual-branch decode GEMV: (y1 (M, N), y8 (M, R)), act-quant fused.
+
+    Same semantics as ``decoupled_matmul`` (outputs pre-scaled by beta /
+    alpha) with the activation quantization done in the kernel prologue.
+    R must fit one N tile (r <= bn).
+    """
+    m, k = x.shape
+    kb, n = w1_packed.shape
+    _, r = w8_i8.shape
+    assert kb * 8 == k, f"packed K mismatch: {kb}*8 != {k}"
+    bk_, bn_ = min(bk, k), min(bn, n)
+    assert bk_ % 8 == 0 and k % bk_ == 0 and n % bn_ == 0, (k, n, bk_, bn_)
+    assert r <= bn_, f"8-bit width {r} must fit one tile (bn={bn_})"
+
+    ab = jnp.stack(
+        [alpha.astype(jnp.float32), beta.astype(jnp.float32)]
+    ).reshape(2)
+    nk = k // bk_
+    # w8 is only consumed on the j == 0 pass; pinning its block index at the
+    # last K tile for j > 0 means the mapped block never changes after that
+    # pass, so the pipeline's revisiting logic streams w8 exactly once
+    # instead of n/bn times.
+    w8_index = lambda j, kk: (jnp.where(j == 0, kk, nk - 1), 0)
+    return pl.pallas_call(
+        functools.partial(_decoupled_gemv_kernel, bk=bk_),
+        grid=(n // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j, kk: (0, 0)),
+            pl.BlockSpec((bk_ // 8, bn_), lambda j, kk: (kk, j)),
+            pl.BlockSpec((bk_, r), w8_index),
+            pl.BlockSpec((1,), lambda j, kk: (0,)),
+            pl.BlockSpec((1,), lambda j, kk: (0,)),
+            pl.BlockSpec((2,), lambda j, kk: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, bn_), lambda j, kk: (0, j)),
+            pl.BlockSpec((m, r), lambda j, kk: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), out_dtype),
+            jax.ShapeDtypeStruct((m, r), out_dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((m, k), jnp.int8),
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m, bn_), jnp.int32),
+            pltpu.VMEM((m, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        x,
+        w1_packed,
+        w8_i8,
+        lam.reshape(1).astype(jnp.float32),
+        w8scale.reshape(1).astype(jnp.float32),
+        ab,
+    )

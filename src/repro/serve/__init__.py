@@ -1,0 +1,9 @@
+"""Serving subsystem: the compiled decode engine lives here; the legacy
+``repro.train.serve`` module re-exports it for backward compatibility."""
+
+from repro.serve.engine import (  # noqa: F401
+    DecodeEngine,
+    SamplerConfig,
+    decode_logits,
+    sample_token,
+)

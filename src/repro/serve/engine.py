@@ -1,0 +1,243 @@
+"""Compiled decode engine: the whole generation loop on device.
+
+The legacy ``BatchedServer.generate`` ran a Python per-token loop — every
+step launched a jitted decode, synced the sampled token to the host
+(``np.asarray``), and re-dispatched.  On a bandwidth-bound W1A8 decode the
+dispatch + host-sync overhead dominates the actual GEMV work, so the loop
+was Python-bound, not hardware-bound.
+
+``DecodeEngine`` compiles prefill -> ``lax.scan`` of (decode step -> top-k
+sample) over the whole token budget into ONE jitted function: sampling runs
+on device, the KV caches stay resident as scan carry, and exactly one
+device->host transfer happens per ``generate`` call (``host_transfers``
+counts them; the engine test asserts the invariant).  ``generate_stream``
+is the chunked variant: one transfer per chunk for incremental delivery.
+
+Logits contract: prefill and decode both surface ``(B, V)`` next-token
+logits (``decode_logits`` normalizes the decode step's ``(B, 1, V)``), so
+sampling never branches on step index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SamplerConfig:
+    temperature: float = 0.8
+    top_k: int = 40
+    max_new_tokens: int = 32
+
+
+def sample_token(key: Array, logits: Array, scfg: SamplerConfig) -> Array:
+    """logits (B, V) -> (B,) int32, on device (scan-safe: top_k static)."""
+    if scfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / scfg.temperature
+    if scfg.top_k > 0 and scfg.top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, scfg.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def decode_logits(params, tok: Array, caches, pos: Array, cfg: ModelConfig):
+    """One decode step under the (B, V) logits contract.
+
+    tok: (B,) int32 current tokens.  Returns ((B, V) logits, new caches).
+    """
+    logits, caches = api.decode_step(params, tok[:, None], caches, pos, cfg)
+    return logits[:, -1], caches
+
+
+def _scan_decode(params, cfg, tok0, caches, pos0, key, length, scfg):
+    """length decode steps from tok0: returns (tokens (B, length), carry).
+
+    Key-split order matches the legacy Python loop (split -> sample) so the
+    two paths produce identical token streams for a given seed.
+    """
+
+    def step(carry, _):
+        tok, caches, pos, key = carry
+        key, sub = jax.random.split(key)
+        logits, caches = decode_logits(params, tok, caches, pos, cfg)
+        nxt = sample_token(sub, logits, scfg)
+        return (nxt, caches, pos + 1, key), nxt
+
+    carry, toks = jax.lax.scan(
+        step, (tok0, caches, pos0, key), None, length=length
+    )
+    return jnp.moveaxis(toks, 0, 1), carry  # (B, length)
+
+
+def _prefill_sample(params, batch, pos_off, key, cfg, cache_len, scfg):
+    """Prefill + sample the first token.  The single definition of the
+    key-split order both generate and generate_stream (and the legacy loop
+    equivalence) depend on."""
+    logits, caches = api.prefill(params, batch, cfg, cache_len)
+    key, sub = jax.random.split(key)
+    tok0 = sample_token(sub, logits, scfg)
+    pos0 = jnp.asarray(batch["tokens"].shape[1], jnp.int32) + pos_off
+    return tok0, caches, pos0, key
+
+
+def _make_generate_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
+    """The whole generation as one jittable fn: prefill + first sample +
+    (T-1)-step scan.  One fused XLA program, no host round-trips inside."""
+    t = scfg.max_new_tokens
+
+    def gen(params, batch, pos_off, key):
+        tok0, caches, pos0, key = _prefill_sample(
+            params, batch, pos_off, key, cfg, cache_len, scfg
+        )
+        rest, _ = _scan_decode(
+            params, cfg, tok0, caches, pos0, key, t - 1, scfg
+        )
+        return jnp.concatenate([tok0[:, None], rest], axis=1)  # (B, T)
+
+    return gen
+
+
+def _make_prefill_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
+    def prefill(params, batch, pos_off, key):
+        return _prefill_sample(params, batch, pos_off, key, cfg, cache_len,
+                               scfg)
+
+    return prefill
+
+
+def _make_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
+    def chunk(params, tok, caches, pos, key):
+        return _scan_decode(params, cfg, tok, caches, pos, key, length, scfg)
+
+    return chunk
+
+
+class DecodeEngine:
+    """Fixed-batch compiled generation engine.
+
+    Compiled programs are cached per (max_new_tokens, temperature, top_k)
+    sampler signature (jax.jit adds the batch-shape axis underneath), so a
+    server reuses one compilation across calls.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, max_len: int):
+        self.params, self.cfg, self.max_len = params, cfg, max_len
+        self._gen_fns: dict = {}
+        self._prefill_fns: dict = {}
+        self._chunk_fns: dict = {}
+        # device->host transfers performed (the engine test asserts exactly
+        # one per generate() call)
+        self.host_transfers = 0
+
+    # -- compilation caches -------------------------------------------------
+
+    @staticmethod
+    def _key(scfg: SamplerConfig):
+        return (scfg.max_new_tokens, float(scfg.temperature), int(scfg.top_k))
+
+    def _gen_fn(self, scfg: SamplerConfig):
+        key = self._key(scfg)
+        if key not in self._gen_fns:
+            self._gen_fns[key] = jax.jit(
+                _make_generate_fn(self.cfg, self.max_len, scfg)
+            )
+        return self._gen_fns[key]
+
+    def _prefill_fn(self, scfg: SamplerConfig):
+        key = self._key(scfg)[1:]  # chunking doesn't depend on T
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = jax.jit(
+                _make_prefill_fn(self.cfg, self.max_len, scfg)
+            )
+        return self._prefill_fns[key]
+
+    def _chunk_fn(self, scfg: SamplerConfig, length: int):
+        key = self._key(scfg)[1:] + (length,)
+        if key not in self._chunk_fns:
+            self._chunk_fns[key] = jax.jit(
+                _make_chunk_fn(self.cfg, scfg, length)
+            )
+        return self._chunk_fns[key]
+
+    # -- host boundary ------------------------------------------------------
+
+    def _fetch(self, x: Array) -> np.ndarray:
+        self.host_transfers += 1
+        return np.asarray(x)
+
+    def _batch_and_off(self, prompts, extra_inputs):
+        batch = {"tokens": prompts, **(extra_inputs or {})}
+        off = (
+            self.cfg.n_image_tokens
+            if (extra_inputs and "image_embeds" in extra_inputs)
+            else 0
+        )
+        return batch, jnp.asarray(off, jnp.int32)
+
+    # -- public API ---------------------------------------------------------
+
+    def generate(
+        self,
+        prompts: Array,  # (B, S) int32, right-aligned equal-length prompts
+        scfg: SamplerConfig = SamplerConfig(),
+        extra_inputs: Optional[dict] = None,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """(B, max_new_tokens) int32 — one device->host transfer total."""
+        if scfg.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"
+            )
+        batch, pos_off = self._batch_and_off(prompts, extra_inputs)
+        toks = self._gen_fn(scfg)(
+            self.params, batch, pos_off, jax.random.PRNGKey(seed)
+        )
+        return self._fetch(toks)
+
+    def generate_stream(
+        self,
+        prompts: Array,
+        scfg: SamplerConfig = SamplerConfig(),
+        extra_inputs: Optional[dict] = None,
+        seed: int = 0,
+        chunk: int = 8,
+    ) -> Iterator[np.ndarray]:
+        """Chunked streaming: yields arrays whose concatenation equals
+        ``generate``'s output, one host transfer per chunk.  The first yield
+        is (B, <=chunk+1) — the prefill-sampled token rides with the first
+        decode chunk — and later yields are (B, <=chunk)."""
+        if chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        if scfg.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"
+            )
+        batch, pos_off = self._batch_and_off(prompts, extra_inputs)
+        tok, caches, pos, key = self._prefill_fn(scfg)(
+            self.params, batch, pos_off, jax.random.PRNGKey(seed)
+        )
+        pending = tok[:, None]  # first token rides with the first chunk
+        remaining = scfg.max_new_tokens - 1
+        while remaining > 0:
+            step = min(chunk, remaining)
+            toks, (tok, caches, pos, key) = self._chunk_fn(scfg, step)(
+                self.params, tok, caches, pos, key
+            )
+            if pending is not None:  # device-side concat: one fetch per chunk
+                toks = jnp.concatenate([pending, toks], axis=1)
+                pending = None
+            yield self._fetch(toks)
+            remaining -= step
+        if pending is not None:  # max_new_tokens == 1: prefill sample only
+            yield self._fetch(pending)

@@ -5,12 +5,18 @@ Decode is the paper's headline efficiency case (W1A8 GEMV is bandwidth
 bound; 1-bit weights cut weight traffic 16x) — the packed-weight Pallas
 path (repro.kernels.ops) is used on TPU; CPU examples run the fake-quant
 path for identical numerics.
+
+The generation loop itself lives in :mod:`repro.serve.engine`
+(``DecodeEngine``): prefill + ``lax.scan`` decode + on-device sampling
+compiled into one program, a single device->host transfer per call.
+``BatchedServer`` is a thin wrapper over it; ``generate_python_loop``
+keeps the legacy per-token host loop as the benchmark baseline
+(``benchmarks/bench_decode.py``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,18 +24,25 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import api
+from repro.serve.engine import (  # noqa: F401  (re-exported for back-compat)
+    DecodeEngine,
+    SamplerConfig,
+    decode_logits,
+    sample_token,
+)
 
 Array = jax.Array
 
 
 def make_serve_step(cfg: ModelConfig):
-    """decode_step(params, tokens, caches, pos) -> (logits, caches).
+    """decode_step(params, tokens, caches, pos) -> (logits (B, V), caches).
 
     This is what decode_32k / long_500k cells lower: one new token against a
-    KV cache of seq_len."""
+    KV cache of seq_len.  Logits are normalized to the (B, V) next-token
+    contract (same as prefill), so samplers never branch on step index."""
 
     def serve_step(params, tokens, caches, pos):
-        return api.decode_step(params, tokens, caches, pos, cfg)
+        return decode_logits(params, tokens[:, 0], caches, pos, cfg)
 
     return serve_step
 
@@ -41,35 +54,17 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int):
     return prefill_step
 
 
-# ---------------------------------------------------------------------------
-# Sampling loop (examples/serve_lm.py)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class SamplerConfig:
-    temperature: float = 0.8
-    top_k: int = 40
-    max_new_tokens: int = 32
-
-
-def sample_token(key: Array, logits: Array, scfg: SamplerConfig) -> Array:
-    """logits (B, V) -> (B,) int32."""
-    if scfg.temperature == 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / scfg.temperature
-    if scfg.top_k > 0 and scfg.top_k < logits.shape[-1]:
-        kth = jax.lax.top_k(logits, scfg.top_k)[0][:, -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
-    return jax.random.categorical(key, logits).astype(jnp.int32)
-
-
 class BatchedServer:
     """Fixed-batch serving engine: prefill a batch of prompts, then decode
-    them in lockstep (the paper's batched-requests scenario)."""
+    them in lockstep (the paper's batched-requests scenario).
+
+    ``generate`` delegates to the compiled :class:`DecodeEngine`;
+    ``generate_python_loop`` is the legacy per-token host loop, kept as the
+    decode-benchmark baseline and the scan-equivalence test oracle."""
 
     def __init__(self, params, cfg: ModelConfig, max_len: int):
         self.params, self.cfg, self.max_len = params, cfg, max_len
+        self.engine = DecodeEngine(params, cfg, max_len)
         self._prefill = jax.jit(make_prefill_step(cfg, max_len))
         self._decode = jax.jit(make_serve_step(cfg))
         self._sample = jax.jit(
@@ -86,18 +81,48 @@ class BatchedServer:
         extra_inputs: Optional[dict] = None,
         seed: int = 0,
     ) -> np.ndarray:
-        b, s = prompts.shape
-        batch = {"tokens": prompts, **(extra_inputs or {})}
+        return self.engine.generate(prompts, scfg, extra_inputs, seed)
+
+    def generate_stream(
+        self,
+        prompts: Array,
+        scfg: SamplerConfig = SamplerConfig(),
+        extra_inputs: Optional[dict] = None,
+        seed: int = 0,
+        chunk: int = 8,
+    ):
+        return self.engine.generate_stream(prompts, scfg, extra_inputs, seed,
+                                           chunk)
+
+    def generate_python_loop(
+        self,
+        prompts: Array,
+        scfg: SamplerConfig = SamplerConfig(),
+        extra_inputs: Optional[dict] = None,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Legacy loop: one jitted decode + one host sync PER TOKEN.
+
+        Kept as the baseline the compiled engine is measured against; both
+        paths produce identical tokens for a given seed (prefill and decode
+        logits share the (B, V) contract, and the key-split order matches
+        the engine's)."""
+        if scfg.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"
+            )
+        s = prompts.shape[1]
+        batch, pos_off = self.engine._batch_and_off(prompts, extra_inputs)
         logits, caches = self._prefill(self.params, batch)
         key = jax.random.PRNGKey(seed)
         out = []
-        pos_off = self.cfg.n_image_tokens if (extra_inputs and "image_embeds" in extra_inputs) else 0
-        tok = None
         for i in range(scfg.max_new_tokens):
             key, sub = jax.random.split(key)
-            tok = self._sample(sub, logits if i == 0 else logits[:, 0],
-                               scfg.temperature, scfg.top_k)
-            out.append(np.asarray(tok))
+            tok = self._sample(sub, logits, scfg.temperature, scfg.top_k)
+            out.append(np.asarray(tok))  # per-token host sync (the problem)
+            if i + 1 == scfg.max_new_tokens:
+                break
             pos = jnp.asarray(s + pos_off + i, jnp.int32)
-            logits, caches = self._decode(self.params, tok[:, None], caches, pos)
+            logits, caches = self._decode(self.params, tok[:, None], caches,
+                                          pos)
         return np.stack(out, axis=1)  # (B, new_tokens)

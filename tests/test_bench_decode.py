@@ -1,0 +1,23 @@
+"""Tier-1 smoke for the decode benchmark: the whole python-loop-vs-engine
+comparison runs (CPU, tiny config) and reports both paths."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def test_bench_decode_smoke(capsys):
+    from benchmarks import bench_decode
+
+    rows = bench_decode.run(smoke=True, batch=2, prompt_len=4, new_tokens=4)
+    names = [r.split(",")[0] for r in rows]
+    assert "decode/python_loop" in names
+    assert "decode/engine" in names
+    assert "decode/engine_stream" in names
+    # the engine row carries a tokens/sec figure for both paths
+    by_name = dict(zip(names, rows))
+    assert "tok_s=" in by_name["decode/python_loop"]
+    assert "tok_s=" in by_name["decode/engine"]
+    # compiled engine does exactly one device->host transfer per call
+    assert by_name["decode/host_transfers"].endswith("per_call=1")
