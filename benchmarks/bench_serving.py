@@ -1,0 +1,179 @@
+"""Serving-tier benchmark: lockstep vs continuous batching under a
+Poisson arrival trace.
+
+Rows (``name,us_per_call,derived`` — us_per_call is p50 request latency):
+  serving/lockstep      fixed batches on DecodeEngine: a batch forms in
+                        arrival order, waits for its last member, decodes
+                        the full budget for everyone (prompts left-padded
+                        to the batch width — the "padding games" the
+                        continuous engine removes)
+  serving/continuous    ContinuousBatchingEngine: per-request admission at
+                        chunk boundaries over the paged KV pool
+  serving/pool          paged-pool accounting for the continuous run
+
+derived carries tokens/sec over the trace makespan (useful tokens only:
+each request's own budget) and the p95 latency, so one CSV row captures
+both the throughput and the tail-latency story.  ``--smoke`` shrinks the
+trace to a seconds-scale CI subset (compile-dominated: the numbers are a
+wiring check there, not a scheduling signal).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def make_trace(n: int, seed: int, mean_gap_s: float, prompt_lens, budgets):
+    """Poisson arrivals: exponential inter-arrival gaps, ragged prompts and
+    budgets cycled deterministically per seed."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    trace = []
+    for i in range(n):
+        t += float(rng.exponential(mean_gap_s))
+        s = int(prompt_lens[i % len(prompt_lens)])
+        trace.append(
+            dict(
+                uid=i,
+                prompt=rng.integers(3, 250, size=s).astype(np.int32),
+                budget=int(budgets[i % len(budgets)]),
+                seed=i,
+                arrival=t,
+            )
+        )
+    return trace
+
+
+def _percentiles(lat_s):
+    lat_ms = np.asarray(lat_s) * 1e3
+    return float(np.percentile(lat_ms, 50)), float(np.percentile(lat_ms, 95))
+
+
+def _run_lockstep(server, trace, num_slots, scfg, t0, pad_to):
+    """Arrival-order batches of num_slots; each batch waits for its last
+    member, prompts are left-padded to ``pad_to`` (pass the full-trace
+    width so warm-up and timed runs compile the same shape), and every
+    member burns the full compiled budget."""
+    import jax.numpy as jnp
+    lat = []
+    done_tokens = 0
+    for i in range(0, len(trace), num_slots):
+        batch = trace[i : i + num_slots]
+        while len(batch) < num_slots:  # ragged tail: repeat to batch width
+            batch = batch + [batch[-1]]
+        start = max(r["arrival"] for r in batch)
+        while time.perf_counter() - t0 < start:
+            time.sleep(1e-4)
+        prompts = np.zeros((num_slots, pad_to), np.int32)
+        for j, r in enumerate(batch):
+            prompts[j, pad_to - len(r["prompt"]) :] = r["prompt"]
+        server.generate(jnp.asarray(prompts), scfg, seed=batch[0]["seed"])
+        finish = time.perf_counter() - t0
+        for r in trace[i : i + num_slots]:
+            lat.append(finish - r["arrival"])
+            done_tokens += r["budget"]
+    return lat, done_tokens, time.perf_counter() - t0
+
+
+def _run_continuous(engine, trace, t0):
+    for r in trace:
+        engine.submit(
+            r["prompt"], max_new_tokens=r["budget"], seed=r["seed"],
+            uid=r["uid"], arrival=r["arrival"],
+        )
+    fin = engine.run()
+    lat = [f.finished_at - f.arrival for f in fin]
+    done_tokens = sum(len(f.tokens) for f in fin)
+    return lat, done_tokens, time.perf_counter() - t0
+
+
+def run(smoke: bool = False, num_slots: int | None = None,
+        n_requests: int | None = None, seed: int = 0):
+    import jax
+    from benchmarks.common import row, tiny_config
+    from repro.models import api
+    from repro.serve.engine import DecodeEngine, SamplerConfig
+    from repro.serve.scheduler import ContinuousBatchingEngine
+
+    num_slots = num_slots or (2 if smoke else 4)
+    n_requests = n_requests or (6 if smoke else 24)
+    prompt_lens = (4, 6) if smoke else (8, 12, 16)
+    budgets = (4, 6) if smoke else (8, 16, 24)
+    chunk = 4 if smoke else 8
+    cfg = tiny_config(d_model=64, d_ff=128, n_layers=2, vocab=256)
+    max_len = max(prompt_lens) + max(budgets)
+    block = 4
+    max_len += (-max_len) % block
+    params, _ = api.init_model(jax.random.PRNGKey(0), cfg)
+    scfg = SamplerConfig(temperature=0.0, top_k=0,
+                         max_new_tokens=max(budgets))
+    trace = make_trace(n_requests, seed, 0.02 if smoke else 0.05,
+                       prompt_lens, budgets)
+
+    box = {"t0": time.perf_counter()}
+    eng = ContinuousBatchingEngine(
+        params, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,
+        layout="paged", block_size=block, chunk=chunk,
+        clock=lambda: time.perf_counter() - box["t0"],
+    )
+    server = DecodeEngine(params, cfg, max_len)
+
+    # warm both paths on an arrival-0 copy of the trace so the timed runs
+    # measure scheduling, not XLA compiles (the engines are reused: their
+    # compilation caches carry over)
+    t0 = box["t0"]
+    warm = [dict(r, arrival=0.0) for r in trace]
+    pad_to = max(len(r["prompt"]) for r in trace)
+    _run_lockstep(server, warm[: num_slots], num_slots, scfg, t0, pad_to)
+    _run_continuous(eng, warm, t0)
+    eng.host_transfers = eng.preemptions = 0
+
+    rows = []
+    t0 = time.perf_counter()
+    lat, toks, span = _run_lockstep(server, trace, num_slots, scfg, t0,
+                                    pad_to)
+    p50, p95 = _percentiles(lat)
+    rows.append(row(
+        "serving/lockstep", p50 * 1e3,
+        f"tok_s={toks / span:.1f};p50_ms={p50:.1f};p95_ms={p95:.1f}",
+    ))
+
+    box["t0"] = t0 = time.perf_counter()
+    clat, ctoks, cspan = _run_continuous(eng, trace, t0)
+    cp50, cp95 = _percentiles(clat)
+    rows.append(row(
+        "serving/continuous", cp50 * 1e3,
+        f"tok_s={ctoks / cspan:.1f};p50_ms={cp50:.1f};p95_ms={cp95:.1f};"
+        f"p50_speedup={p50 / max(cp50, 1e-9):.2f}x",
+    ))
+    rows.append(row(
+        "serving/pool", 0.0,
+        f"blocks={eng.num_blocks};free={eng.allocator.free_count};"
+        f"preemptions={eng.preemptions};host_transfers={eng.host_transfers}",
+    ))
+    return rows
+
+
+def main():
+    # allow `python benchmarks/bench_serving.py` from the repo root
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI subset")
+    ap.add_argument("--num-slots", type=int, default=None)
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, num_slots=args.num_slots,
+        n_requests=args.n_requests, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §6):
   Figure 10 -> bench_stability     divergence/spike counts at hot LR
   §Roofline -> bench_roofline      dry-run roofline terms per cell
   §Decode   -> bench_decode        python loop vs compiled engine tok/s
+  §Serving  -> bench_serving       lockstep vs continuous batching latency
 """
 
 import argparse
@@ -34,6 +35,7 @@ def main() -> None:
         bench_roofline,
         bench_scaling,
         bench_sensitivity,
+        bench_serving,
         bench_stability,
         bench_step_time,
     )
@@ -44,6 +46,7 @@ def main() -> None:
         "roofline": lambda: bench_roofline.run(),
         "step_time": lambda: bench_step_time.run(),
         "decode": lambda: bench_decode.run(),
+        "serving": lambda: bench_serving.run(),
         "quality": lambda: bench_quality.run(steps=args.steps),
         "scaling": lambda: bench_scaling.run(steps=args.steps),
         "matched": lambda: bench_matched.run(steps=args.steps),

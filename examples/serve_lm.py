@@ -6,7 +6,10 @@ sampling — the paper's edge-inference scenario (W1A8 weights, KV cache).
 Generation runs on the compiled decode engine (prefill + lax.scan + on-device
 sampling, one host transfer).  ``--compare`` also times the legacy per-token
 Python loop and prints the speedup; ``--stream`` prints tokens chunk by
-chunk as the engine produces them.
+chunk as the engine produces them; ``--continuous`` serves the same
+prompts through the continuous-batching engine instead (ragged prompts,
+per-request budgets/seeds, paged KV pool — each request's stream matches
+the lockstep engine's for its seed).
 
 Without --ckpt it serves a freshly initialised reduced model (tokens are
 synthetic ids); with a checkpoint from train_lm.py it decodes that model.
@@ -39,6 +42,10 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="stream tokens chunk by chunk")
     ap.add_argument("--stream-chunk", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve via the continuous-batching engine "
+                         "(ragged prompts, paged KV pool)")
+    ap.add_argument("--block-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -56,12 +63,41 @@ def main():
         params, _ = api.init_model(key, cfg)
         print("serving a randomly initialised reduced model")
 
+    scfg = SamplerConfig(temperature=0.8, top_k=40,
+                         max_new_tokens=args.new_tokens)
+
+    if args.continuous:
+        from repro.serve.scheduler import ContinuousBatchingEngine
+
+        max_len = args.prompt_len + args.new_tokens
+        max_len += (-max_len) % args.block_size
+        eng = ContinuousBatchingEngine(
+            params, cfg, num_slots=max(2, args.batch // 2), max_len=max_len,
+            scfg=scfg, layout="paged", block_size=args.block_size,
+        )
+        rng = jax.random
+        t0 = time.time()
+        for i in range(args.batch):
+            # ragged prompts: each request its own length and seed
+            s = max(1, args.prompt_len - i % 4)
+            prompt = rng.randint(rng.PRNGKey(i), (s,), 3, cfg.vocab_size)
+            eng.submit(prompt, max_new_tokens=args.new_tokens, seed=i, uid=i)
+        finished = eng.run()
+        dt = time.time() - t0
+        total = sum(len(f.tokens) for f in finished)
+        print(f"continuous batching: {len(finished)} requests, {total} "
+              f"tokens in {dt:.1f}s ({total / dt:.1f} tok/s incl. compile); "
+              f"pool free {eng.allocator.free_count}/{eng.num_blocks}, "
+              f"{eng.preemptions} preemptions")
+        for f in sorted(finished, key=lambda f: f.uid)[:4]:
+            print(f"  request {f.uid} ({f.finish_reason}): "
+                  f"{f.tokens.tolist()}")
+        return
+
     server = BatchedServer(params, cfg, max_len=args.prompt_len + args.new_tokens + 1)
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 3, cfg.vocab_size
     ).astype(jnp.int32)
-    scfg = SamplerConfig(temperature=0.8, top_k=40,
-                         max_new_tokens=args.new_tokens)
     toks = args.batch * args.new_tokens
 
     if args.stream:

@@ -16,7 +16,10 @@ the prefill-tiled kernels and the decode GEMV tier:
 Tile sizes for the decode tier come from a per-(M, K, N) dispatch table:
 ``decode_tiles`` answers from divisor heuristics, and ``sweep_decode_tiles``
 runs a timed sweep on the current backend and caches the winner under the
-same signature so later calls (and jit retraces) pick it up.
+same signature so later calls (and jit retraces) pick it up.  Swept
+winners are also mirrored to a per-backend JSON file
+(``repro.kernels.tile_cache``) loaded on the first lookup, so autotuning
+survives process restarts.
 """
 
 from __future__ import annotations
@@ -27,7 +30,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, tile_cache
 from repro.kernels.decoupled_matmul import decoupled_matmul
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.rmsnorm_quant import rmsnorm_quant
@@ -41,9 +44,22 @@ Array = jax.Array
 # while anything larger amortizes like prefill.
 DECODE_M_MAX = 32
 
-# (op, m, k, n) -> (bk, bn): filled by sweep_decode_tiles; consulted before
-# the divisor heuristic so an autotuned signature sticks for the process.
+# (op, m, k, n) -> (bk, bn): filled by sweep_decode_tiles (and, lazily, by
+# the on-disk per-backend cache); consulted before the divisor heuristic so
+# an autotuned signature sticks for the process.
 _DECODE_TILE_CACHE: dict[tuple, tuple[int, int]] = {}
+_TILE_CACHE_LOADED = False
+
+
+def _ensure_tile_cache_loaded() -> None:
+    """Merge persisted winners on first use (in-process entries win).
+    Lazy so importing ops never forces jax backend initialisation."""
+    global _TILE_CACHE_LOADED
+    if _TILE_CACHE_LOADED:
+        return
+    _TILE_CACHE_LOADED = True
+    for key, tiles in tile_cache.load(jax.default_backend()).items():
+        _DECODE_TILE_CACHE.setdefault(key, tiles)
 
 _BK_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
 _BN_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
@@ -99,9 +115,11 @@ def _tile_key(op: str, m: int, k: int, n: int, r: int | None):
 
 def decode_tiles(m: int, k: int, n: int, op: str = "w1a8_gemv",
                  r: int | None = None):
-    """(bk, bn) for a decode-shaped call: autotuned entry if one was swept,
-    otherwise the widest candidate tiles that divide (K, N).  For the
-    decoupled op, bn always fits the 8-bit branch (bn >= r)."""
+    """(bk, bn) for a decode-shaped call: autotuned entry if one was swept
+    (this process or a persisted earlier one), otherwise the widest
+    candidate tiles that divide (K, N).  For the decoupled op, bn always
+    fits the 8-bit branch (bn >= r)."""
+    _ensure_tile_cache_loaded()
     cached = _DECODE_TILE_CACHE.get(_tile_key(op, m, k, n, r))
     if cached is not None:
         return cached
@@ -135,6 +153,8 @@ def sweep_decode_tiles(
     branch width to sweep with).  The sweep runs whatever backend is active
     (interpret on CPU, compiled on TPU) — call it once per decode signature
     at server start-up; subsequent calls with that signature use the cache.
+    Winners are mirrored to the per-backend on-disk cache
+    (``repro.kernels.tile_cache``), so later processes skip the sweep.
     """
     import numpy as np
 
@@ -183,6 +203,7 @@ def sweep_decode_tiles(
     if best is None:
         best = decode_tiles(m_p, k, n, op=op, r=r)
     _DECODE_TILE_CACHE[key] = best
+    tile_cache.store(jax.default_backend(), {key: best})
     return best
 
 

@@ -1,0 +1,89 @@
+"""On-disk persistence for the decode-tier tile dispatch table.
+
+``ops.sweep_decode_tiles`` times candidate (bk, bn) tiles and caches the
+winner per (op, m, k, n[, r]) signature — but only in-process, so every
+server restart re-pays the sweep.  This module mirrors that table to a
+per-backend JSON file:
+
+    $REPRO_TILE_CACHE_DIR/decode_tiles_{backend}.json
+    (default: ~/.cache/repro/)
+
+``ops`` loads the file lazily on the first decode-tile lookup and appends
+every newly swept winner, so autotuning survives process restarts.  Tile
+winners are backend-specific (a TPU sweep means nothing on CPU interpret
+mode), hence the per-backend file.  Set ``REPRO_TILE_CACHE=0`` to disable
+both load and store (hermetic CI runs).
+
+File format: ``{"op|m|k|n[|r]": [bk, bn], ...}`` — flat, mergeable, and
+stable under concurrent writers (atomic replace; last writer wins on a
+per-key basis after merging with the on-disk content).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+
+_KEY_SEP = "|"
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_TILE_CACHE", "1") != "0"
+
+
+def cache_path(backend: str) -> pathlib.Path:
+    root = os.environ.get("REPRO_TILE_CACHE_DIR")
+    base = pathlib.Path(root) if root else pathlib.Path.home() / ".cache" / "repro"
+    return base / f"decode_tiles_{backend}.json"
+
+
+def _encode_key(key: tuple) -> str:
+    return _KEY_SEP.join(str(p) for p in key)
+
+
+def _decode_key(s: str) -> tuple:
+    parts = s.split(_KEY_SEP)
+    return (parts[0],) + tuple(int(p) for p in parts[1:])
+
+
+def load(backend: str) -> dict[tuple, tuple[int, int]]:
+    """Persisted winners for ``backend`` ({} on any miss/corruption —
+    a broken cache file must never break inference)."""
+    if not enabled():
+        return {}
+    try:
+        raw = json.loads(cache_path(backend).read_text())
+        return {
+            _decode_key(k): (int(v[0]), int(v[1])) for k, v in raw.items()
+        }
+    except (OSError, ValueError, KeyError, IndexError, TypeError):
+        return {}
+
+
+def store(backend: str, table: dict[tuple, tuple[int, int]]) -> None:
+    """Merge ``table`` into the on-disk cache (best-effort: serving never
+    fails because a cache dir is read-only).  Atomic replace so concurrent
+    sweeps can't interleave partial JSON."""
+    if not enabled() or not table:
+        return
+    path = cache_path(backend)
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        merged = load(backend)
+        merged.update(table)
+        payload = json.dumps(
+            {_encode_key(k): list(v) for k, v in sorted(merged.items())},
+            indent=0,
+        )
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
+    except OSError:
+        pass

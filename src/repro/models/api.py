@@ -47,12 +47,35 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int):
     return _mod(cfg).prefill(params, batch, cfg, cache_len)
 
 
-def decode_step(params, tokens, caches, pos, cfg: ModelConfig):
-    return _mod(cfg).decode_step(params, tokens, caches, pos, cfg)
+def decode_step(params, tokens, caches, pos, cfg: ModelConfig, active=None):
+    """``pos`` may be scalar (lockstep) or (B,) (per-slot, continuous
+    batching); ``active`` optionally masks per-slot cache writes.  Both
+    extensions are decoder-family only — encdec serving stays lockstep."""
+    if active is None and jnp.asarray(pos).ndim == 0:
+        return _mod(cfg).decode_step(params, tokens, caches, pos, cfg)
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "per-slot pos/active decode is not supported for encdec"
+        )
+    return _mod(cfg).decode_step(params, tokens, caches, pos, cfg, active)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    layout: str = "dense",
+    block_size: int = 16,
+    num_blocks: int | None = None,
+):
+    if layout == "dense":
+        return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged KV caches are decoder-family only")
+    return _mod(cfg).init_cache(
+        cfg, batch, max_len, dtype, layout, block_size, num_blocks
+    )
 
 
 def params_shape_and_axes(cfg: ModelConfig):

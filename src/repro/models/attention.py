@@ -2,10 +2,21 @@
 and cross-attention (Whisper).  All projections are BitLinear (pure 1-bit,
 paper §3.1) in quantized modes.
 
-Cache protocol (decode): each layer owns a dict of ring-buffer arrays plus
-the model-level integer ``pos`` (same for all layers).  ``*_prefill`` fills
-the cache from a full sequence; ``*_decode`` consumes/extends it by one
-token.
+Cache-adapter protocol (decode): each layer owns a dict of cache arrays;
+``*_prefill`` fills it from a full sequence and ``*_decode`` extends it by
+one token.  Two interchangeable layouts ride the same call sites:
+
+* dense — ``{"k", "v"}`` ring buffers ``(B, L, H, D)`` (L < max_len on
+  sliding-window layers; slot(p) = p % L *is* the window).
+* paged — ``{"kpool", "vpool", "table"}`` from ``repro.serve.kv_pool``: a
+  shared block pool plus per-slot block tables.  The ``"table"`` key is
+  the layout discriminator.
+
+``pos`` may be the model-level scalar (lockstep decode: every slot at the
+same position) or a ``(B,)`` vector (continuous batching: ragged slots).
+``active`` is an optional ``(B,)`` bool mask — inactive (finished /
+unoccupied) slots produce **no cache writes**, which is what makes block
+reclamation safe while a chunk is still in flight.
 """
 
 from __future__ import annotations
@@ -167,6 +178,51 @@ def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return cache, axes
 
 
+def _rope_decode(x: Array, pos: Array, head_dim: int, theta) -> Array:
+    """Rotate one decode token per slot.  x: (B, 1, H, D).
+
+    Scalar ``pos`` reproduces the original shared-position path bit-for-bit;
+    a ``(B,)`` vector applies each slot's own angle (continuous batching).
+    """
+    if pos.ndim == 0:
+        sin, cos = rope_table(pos[None], head_dim, theta)
+        return apply_rope(x, sin, cos)
+    sin, cos = rope_table(pos, head_dim, theta)  # (B, D/2)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[:, None, None, :].astype(x.dtype)
+    cos = cos[:, None, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _slot_write(cache: Array, new: Array, slot: Array, active: Array | None):
+    """Dense-adapter write: one token per slot at per-slot ring positions.
+
+    cache: (B, L, ...); new: (B, 1, ...); slot: (B,) int32.  One-hot
+    ``where`` rather than dynamic_update_slice because each batch row
+    writes a *different* position, and inactive rows write nothing.
+    """
+    l = cache.shape[1]
+    hit = jnp.arange(l)[None, :] == slot[:, None]  # (B, L)
+    if active is not None:
+        hit = hit & active[:, None]
+    hit = hit.reshape(hit.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(hit, new.astype(cache.dtype), cache)
+
+
+def _decode_mask(pos: Array, skv: int, ring: bool) -> Array:
+    """Validity mask for a decode read, broadcastable to (B, 1, 1, Skv).
+
+    ring=True caps at the buffer length (after wrap, every slot is live);
+    ring=False is the plain prefix mask used by full-length/paged caches.
+    """
+    j = jnp.arange(skv)
+    lim = jnp.minimum(pos, skv - 1) if ring else pos
+    if pos.ndim == 0:
+        return jnp.broadcast_to((j <= lim)[None, None, None], (1, 1, 1, skv))
+    return (j[None, :] <= lim[:, None])[:, None, None, :]
+
+
 def attention_decode(
     params,
     x: Array,
@@ -175,36 +231,57 @@ def attention_decode(
     cfg: ModelConfig,
     theta: float,
     window=0,
+    active: Array | None = None,
 ):
-    """One-token decode step. x: (B, 1, D); pos: scalar int (current index).
+    """One-token decode step. x: (B, 1, D); pos: scalar or (B,) int32.
 
-    The cache may be shorter than the sequence (RING cache for
+    Dense caches may be shorter than the sequence (RING cache for
     sliding-window layers): the write slot is ``pos % cache_len`` and the
     validity mask covers min(pos+1, cache_len) slots — a cache of length W
     IS the W-token sliding window, so no extra window masking is needed.
+    Paged caches (``"table"`` key) scatter into the shared block pool and
+    gather a dense view back for scoring (see ``repro.serve.kv_pool``).
 
     Returns (y, new_cache).
     """
     b = x.shape[0]
     del window  # window semantics are carried by the cache length (ring)
     q, k, v = _project_qkv(params, x, cfg)
+    pos = jnp.asarray(pos, jnp.int32)
     if cfg.pos_embedding == "rope":
-        sin, cos = rope_table(pos[None], cfg.head_dim, theta)
-        q = apply_rope(q, sin, cos)
-        k = apply_rope(k, sin, cos)
+        q = _rope_decode(q, pos, cfg.head_dim, theta)
+        k = _rope_decode(k, pos, cfg.head_dim, theta)
+
+    if "table" in cache:  # paged adapter
+        from repro.serve import kv_pool  # deferred: serve imports models
+
+        posv = jnp.broadcast_to(pos, (b,))
+        kp = kv_pool.write(cache["kpool"], cache["table"], posv, k[:, 0], active)
+        vp = kv_pool.write(cache["vpool"], cache["table"], posv, v[:, 0], active)
+        keys = kv_pool.read(kp, cache["table"])
+        vals = kv_pool.read(vp, cache["table"])
+        mask = _decode_mask(posv, keys.shape[1], ring=False)
+        out = _sdpa(q, keys.astype(q.dtype), vals.astype(q.dtype), mask)
+        new_cache = {"kpool": kp, "vpool": vp, "table": cache["table"]}
+        return _out_proj(params, out, cfg), new_cache
+
     skv = cache["k"].shape[1]
-    slot = pos % skv
-    new_k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=1
-    )
-    new_v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=1
-    )
+    if pos.ndim == 0 and active is None:
+        # lockstep fast path: every slot writes the same ring position
+        slot = pos % skv
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+        )
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+        )
+    else:
+        posv = jnp.broadcast_to(pos, (b,))
+        new_k = _slot_write(cache["k"], k, posv % skv, active)
+        new_v = _slot_write(cache["v"], v, posv % skv, active)
     new_k = shard_hint(new_k, "batch", "cache_seq", "cache_heads", None)
     new_v = shard_hint(new_v, "batch", "cache_seq", "cache_heads", None)
-    j = jnp.arange(skv)[None, :]
-    m = j <= jnp.minimum(pos, skv - 1)
-    mask = jnp.broadcast_to(m[None, None], (1, 1, 1, skv))
+    mask = _decode_mask(pos, skv, ring=True)
     out = _sdpa(q, new_k.astype(q.dtype), new_v.astype(q.dtype), mask)
     return _out_proj(params, out, cfg), {"k": new_k, "v": new_v}
 
@@ -349,23 +426,41 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return cache, axes
 
 
-def mla_decode(params, x: Array, cache: dict, pos: Array, cfg: ModelConfig):
+def mla_decode(
+    params,
+    x: Array,
+    cache: dict,
+    pos: Array,
+    cfg: ModelConfig,
+    active: Array | None = None,
+):
+    """MLA decode keeps the dense latent cache in both serving engines —
+    caching only ``(B, L, kv_lora_rank)`` latents is already the memory
+    win paging chases, so only the write/mask paths learn per-slot ``pos``
+    and ``active``."""
     b = x.shape[0]
     nh = cfg.n_heads
     q_nope, q_rope = _mla_q(params, x, cfg)
     down = bitlinear(params["wkv_down"], x, cfg.quant)
     ckv_new = rmsnorm(params["kv_norm"], down[..., : cfg.kv_lora_rank])
     krope_new = down[..., cfg.kv_lora_rank :]
-    sin, cos = rope_table(pos[None], cfg.qk_rope_dim, cfg.rope_theta)
-    q_rope = apply_rope(q_rope, sin, cos)
-    krope_new = apply_rope(krope_new[:, :, None, :], sin, cos)[:, :, 0]
+    pos = jnp.asarray(pos, jnp.int32)
+    q_rope = _rope_decode(q_rope, pos, cfg.qk_rope_dim, cfg.rope_theta)
+    krope_new = _rope_decode(
+        krope_new[:, :, None, :], pos, cfg.qk_rope_dim, cfg.rope_theta
+    )[:, :, 0]
 
-    new_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1
-    )
-    new_krope = jax.lax.dynamic_update_slice_in_dim(
-        cache["krope"], krope_new.astype(cache["krope"].dtype), pos, axis=1
-    )
+    if pos.ndim == 0 and active is None:
+        new_ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1
+        )
+        new_krope = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope_new.astype(cache["krope"].dtype), pos, axis=1
+        )
+    else:
+        posv = jnp.broadcast_to(pos, (b,))
+        new_ckv = _slot_write(cache["ckv"], ckv_new, posv, active)
+        new_krope = _slot_write(cache["krope"], krope_new, posv, active)
     skv = new_ckv.shape[1]
     # expand the whole latent cache for scoring (weight-absorption variant is
     # a serving optimisation tracked in EXPERIMENTS.md §Perf)
@@ -380,7 +475,7 @@ def mla_decode(params, x: Array, cache: dict, pos: Array, cfg: ModelConfig):
         axis=-1,
     )
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    mask = (jnp.arange(skv)[None, :] <= pos)[None, None]
+    mask = _decode_mask(pos, skv, ring=False)
     scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
     out = _sdpa(q, k, v, mask, scale=scale)
     subln = params.get("subln")

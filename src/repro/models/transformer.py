@@ -464,10 +464,31 @@ def lm_loss(params, batch: dict, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def _init_block_cache(spec: BlockSpec, cfg: ModelConfig, batch: int, max_len: int, dtype):
+def _init_block_cache(
+    spec: BlockSpec,
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype,
+    layout: str = "dense",
+    block_size: int = 16,
+    num_blocks: int | None = None,
+):
     if spec.mixer == "attn":
-        length = min(spec.window, max_len) if spec.window > 0 else max_len
-        return attn_mod.init_attention_cache(cfg, batch, length, dtype)
+        if spec.window > 0:
+            # sliding-window layers keep the dense RING cache in both
+            # layouts: a W-length ring IS the window, and W is small
+            length = min(spec.window, max_len)
+            return attn_mod.init_attention_cache(cfg, batch, length, dtype)
+        if layout == "paged":
+            from repro.serve import kv_pool  # deferred: serve imports models
+
+            nb = num_blocks or batch * kv_pool.blocks_for(max_len, block_size)
+            return kv_pool.init_paged_attention_cache(
+                batch, max_len, cfg.n_kv_heads, cfg.head_dim, nb,
+                block_size, dtype,
+            )
+        return attn_mod.init_attention_cache(cfg, batch, max_len, dtype)
     if spec.mixer == "mla":
         return attn_mod.init_mla_cache(cfg, batch, max_len, dtype)
     if spec.mixer == "ssm":
@@ -477,13 +498,30 @@ def _init_block_cache(spec: BlockSpec, cfg: ModelConfig, batch: int, max_len: in
     raise ValueError(spec.mixer)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    layout: str = "dense",
+    block_size: int = 16,
+    num_blocks: int | None = None,
+):
+    """Cache pytree for decode.  ``layout="dense"`` is the per-slot buffer
+    layout every caller gets by default; ``layout="paged"`` swaps global-
+    attention layers to the shared block pool (``repro.serve.kv_pool``) —
+    same tree structure, interchangeable at every decode call site."""
+    if layout not in ("dense", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
     segs = build_segments(cfg)
     caches, axes = [], []
     for seg in segs:
         seg_c, seg_a = {}, {}
         for bi, spec in enumerate(seg.blocks):
-            c, a = _init_block_cache(spec, cfg, batch, max_len, dtype)
+            c, a = _init_block_cache(
+                spec, cfg, batch, max_len, dtype, layout, block_size,
+                num_blocks,
+            )
             if seg.repeats > 1:
                 c = jax.tree.map(
                     lambda t: jnp.broadcast_to(t[None], (seg.repeats,) + t.shape), c
@@ -496,7 +534,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches, axes
 
 
-def _mixer_decode(bparams, spec: BlockSpec, x, cache, pos, cfg: ModelConfig, meta):
+def _freeze_inactive(new_cache, old_cache, active):
+    """Keep inactive slots' recurrent state untouched (ssm/rec mixers
+    update state unconditionally; attention variants mask writes inline)."""
+
+    def keep(n, o):
+        a = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o.astype(n.dtype))
+
+    return jax.tree.map(keep, new_cache, old_cache)
+
+
+def _mixer_decode(
+    bparams, spec: BlockSpec, x, cache, pos, cfg: ModelConfig, meta,
+    active=None,
+):
     if spec.mixer == "attn":
         if cfg.global_every > 0:
             theta = jnp.where(
@@ -505,20 +557,29 @@ def _mixer_decode(bparams, spec: BlockSpec, x, cache, pos, cfg: ModelConfig, met
         else:
             theta = cfg.rope_theta
         return attn_mod.attention_decode(
-            bparams["mixer"], x, cache, pos, cfg, theta, window=meta["window"]
+            bparams["mixer"], x, cache, pos, cfg, theta,
+            window=meta["window"], active=active,
         )
     if spec.mixer == "mla":
-        return attn_mod.mla_decode(bparams["mixer"], x, cache, pos, cfg)
+        return attn_mod.mla_decode(
+            bparams["mixer"], x, cache, pos, cfg, active=active
+        )
     if spec.mixer == "ssm":
-        return ssm_mod.mamba_decode(bparams["mixer"], x, cache, cfg)
-    if spec.mixer == "rec":
-        return rglru_mod.rglru_decode(bparams["mixer"], x, cache, cfg)
-    raise ValueError(spec.mixer)
+        out = ssm_mod.mamba_decode(bparams["mixer"], x, cache, cfg)
+    elif spec.mixer == "rec":
+        out = rglru_mod.rglru_decode(bparams["mixer"], x, cache, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if active is not None:
+        out = (out[0], _freeze_inactive(out[1], cache, active))
+    return out
 
 
-def _decode_block(bparams, spec, x, cache, pos, cfg, meta):
+def _decode_block(bparams, spec, x, cache, pos, cfg, meta, active=None):
     h = rmsnorm(bparams["pre_norm"], x)
-    y, new_cache = _mixer_decode(bparams, spec, h, cache, pos, cfg, meta)
+    y, new_cache = _mixer_decode(
+        bparams, spec, h, cache, pos, cfg, meta, active
+    )
     x = x + y
     if spec.ffn is not None:
         h = rmsnorm(bparams["ffn_norm"], x)
@@ -530,9 +591,14 @@ def _decode_block(bparams, spec, x, cache, pos, cfg, meta):
     return x, new_cache
 
 
-def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig):
-    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (current
-    write index).  Returns (logits (B,1,V), new_caches)."""
+def decode_step(
+    params, tokens: Array, caches, pos: Array, cfg: ModelConfig,
+    active: Array | None = None,
+):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (lockstep:
+    every slot at the same write index) or (B,) int32 (per-slot positions,
+    continuous batching).  ``active`` optionally masks cache writes per
+    slot.  Returns (logits (B,1,V), new_caches)."""
     x = embed(params["embed"], tokens, cfg)
     segs = build_segments(cfg)
     new_caches = []
@@ -545,7 +611,8 @@ def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig):
             for bi, spec in enumerate(seg.blocks):
                 meta = {k: v[0] for k, v in metas[bi].items()}
                 x, nc = _decode_block(
-                    seg_p[f"b{bi}"], spec, x, seg_c[f"b{bi}"], pos, cfg, meta
+                    seg_p[f"b{bi}"], spec, x, seg_c[f"b{bi}"], pos, cfg, meta,
+                    active,
                 )
                 new_seg[f"b{bi}"] = nc
             new_caches.append(new_seg)
@@ -558,7 +625,8 @@ def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig):
                 for bi, spec in enumerate(seg.blocks):
                     meta = {k: v[r] for k, v in metas[bi].items()}
                     x, nc = _decode_block(
-                        layer_p[f"b{bi}"], spec, x, layer_c[f"b{bi}"], pos, cfg, meta
+                        layer_p[f"b{bi}"], spec, x, layer_c[f"b{bi}"], pos,
+                        cfg, meta, active,
                     )
                     new_c[f"b{bi}"] = nc
                 reps.append(new_c)
@@ -571,7 +639,7 @@ def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig):
                 for bi, spec in enumerate(seg.blocks):
                     x, nc = _decode_block(
                         bp_all[f"b{bi}"], spec, x, c_all[f"b{bi}"], pos, cfg,
-                        meta_all[f"b{bi}"],
+                        meta_all[f"b{bi}"], active,
                     )
                     new_c[f"b{bi}"] = nc
                 return x, new_c

@@ -1,9 +1,39 @@
-"""Serving subsystem: the compiled decode engine lives here; the legacy
-``repro.train.serve`` module re-exports it for backward compatibility."""
+"""Serving subsystem — three engine tiers over one model stack.
+
+1. **Python loop** (``repro.train.serve.BatchedServer.generate_python_loop``)
+   — one jitted decode + one host sync per token.  Kept as the benchmark
+   baseline and the scan-equivalence oracle.
+2. **Compiled lockstep** (:class:`~repro.serve.engine.DecodeEngine`) —
+   prefill + ``lax.scan`` decode + on-device sampling fused into one XLA
+   program; a fixed batch decodes in lockstep, one device->host transfer
+   per ``generate`` (per chunk when streaming, with the stop-token done
+   mask riding the same transfer for early exit).
+3. **Continuous batching**
+   (:class:`~repro.serve.scheduler.ContinuousBatchingEngine`) — the same
+   compiled chunked decode, plus a request lifecycle around it: queued
+   requests are admitted into slots at chunk boundaries, tracked with
+   per-slot positions / PRNG keys / stop masks on device, and evicted the
+   chunk they finish, freeing their KV blocks for the next request.
+
+Cache-adapter protocol: decode caches are per-layer dicts in one of two
+interchangeable layouts — dense ``{"k", "v"}`` ring buffers, or paged
+``{"kpool", "vpool", "table"}`` backed by the shared block pool in
+:mod:`repro.serve.kv_pool` (a ``(num_blocks, block, n_kv_heads, head_dim)``
+pool per global-attention layer plus per-slot block tables; sliding-window
+layers keep their dense ring caches, whose length *is* the window).  The
+model stack dispatches on the ``"table"`` key, so every engine tier runs
+either layout and produces identical tokens.
+"""
 
 from repro.serve.engine import (  # noqa: F401
     DecodeEngine,
     SamplerConfig,
     decode_logits,
     sample_token,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousBatchingEngine,
+    FinishedRequest,
+    Request,
+    RequestState,
 )

@@ -33,11 +33,25 @@ from repro.models import api
 Array = jax.Array
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SamplerConfig:
     temperature: float = 0.8
     top_k: int = 40
     max_new_tokens: int = 32
+    # tokens that end a sequence.  ``generate`` still runs the full compiled
+    # budget (one fused program, fixed shape); ``generate_stream`` tracks a
+    # per-sequence done mask on device and exits its Python chunk loop once
+    # every sequence has stopped.  The continuous-batching engine
+    # (repro.serve.scheduler) short-circuits per request.
+    stop_tokens: tuple[int, ...] = ()
+
+
+def _hit_stop(tok: Array, scfg: SamplerConfig) -> Array:
+    """(B,) bool — did this step's token end its sequence?"""
+    if not scfg.stop_tokens:
+        return jnp.zeros(tok.shape, bool)
+    stop = jnp.asarray(scfg.stop_tokens, jnp.int32)
+    return (tok[:, None] == stop[None, :]).any(axis=-1)
 
 
 def sample_token(key: Array, logits: Array, scfg: SamplerConfig) -> Array:
@@ -60,22 +74,30 @@ def decode_logits(params, tok: Array, caches, pos: Array, cfg: ModelConfig):
     return logits[:, -1], caches
 
 
-def _scan_decode(params, cfg, tok0, caches, pos0, key, length, scfg):
+def _scan_decode(params, cfg, tok0, caches, pos0, key, length, scfg,
+                 done0=None):
     """length decode steps from tok0: returns (tokens (B, length), carry).
 
     Key-split order matches the legacy Python loop (split -> sample) so the
-    two paths produce identical token streams for a given seed.
+    two paths produce identical token streams for a given seed.  This is
+    the ONLY definition of the step body: generate, generate_stream chunks
+    and the stop-mask tracking all run through it, so the key-split parity
+    contract cannot drift between paths.  The carry's trailing ``done``
+    mask records which sequences have emitted a stop token (it never
+    alters sampling — generate's output stays budget-shaped).
     """
+    if done0 is None:
+        done0 = jnp.zeros(tok0.shape, bool)
 
     def step(carry, _):
-        tok, caches, pos, key = carry
+        tok, caches, pos, key, done = carry
         key, sub = jax.random.split(key)
         logits, caches = decode_logits(params, tok, caches, pos, cfg)
         nxt = sample_token(sub, logits, scfg)
-        return (nxt, caches, pos + 1, key), nxt
+        return (nxt, caches, pos + 1, key, done | _hit_stop(nxt, scfg)), nxt
 
     carry, toks = jax.lax.scan(
-        step, (tok0, caches, pos0, key), None, length=length
+        step, (tok0, caches, pos0, key, done0), None, length=length
     )
     return jnp.moveaxis(toks, 0, 1), carry  # (B, length)
 
@@ -117,8 +139,20 @@ def _make_prefill_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
 
 
 def _make_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
-    def chunk(params, tok, caches, pos, key):
-        return _scan_decode(params, cfg, tok, caches, pos, key, length, scfg)
+    """Streaming chunk: ``length`` decode steps plus per-sequence done
+    tracking.  Returns (packed (B, length+1), carry) where the last packed
+    column is the post-chunk done mask — it rides the chunk's single
+    device->host transfer so the host loop can early-exit without an extra
+    fetch (the transfers-per-chunk invariant test stays honest)."""
+
+    def chunk(params, tok, caches, pos, key, done):
+        toks, carry = _scan_decode(
+            params, cfg, tok, caches, pos, key, length, scfg, done
+        )
+        packed = jnp.concatenate(
+            [toks, carry[-1][:, None].astype(toks.dtype)], axis=1
+        )
+        return packed, carry
 
     return chunk
 
@@ -144,7 +178,12 @@ class DecodeEngine:
 
     @staticmethod
     def _key(scfg: SamplerConfig):
-        return (scfg.max_new_tokens, float(scfg.temperature), int(scfg.top_k))
+        return (
+            scfg.max_new_tokens,
+            float(scfg.temperature),
+            int(scfg.top_k),
+            tuple(scfg.stop_tokens),
+        )
 
     def _gen_fn(self, scfg: SamplerConfig):
         key = self._key(scfg)
@@ -190,11 +229,12 @@ class DecodeEngine:
     def generate(
         self,
         prompts: Array,  # (B, S) int32, right-aligned equal-length prompts
-        scfg: SamplerConfig = SamplerConfig(),
+        scfg: Optional[SamplerConfig] = None,
         extra_inputs: Optional[dict] = None,
         seed: int = 0,
     ) -> np.ndarray:
         """(B, max_new_tokens) int32 — one device->host transfer total."""
+        scfg = SamplerConfig() if scfg is None else scfg
         if scfg.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"
@@ -208,7 +248,7 @@ class DecodeEngine:
     def generate_stream(
         self,
         prompts: Array,
-        scfg: SamplerConfig = SamplerConfig(),
+        scfg: Optional[SamplerConfig] = None,
         extra_inputs: Optional[dict] = None,
         seed: int = 0,
         chunk: int = 8,
@@ -216,7 +256,15 @@ class DecodeEngine:
         """Chunked streaming: yields arrays whose concatenation equals
         ``generate``'s output, one host transfer per chunk.  The first yield
         is (B, <=chunk+1) — the prefill-sampled token rides with the first
-        decode chunk — and later yields are (B, <=chunk)."""
+        decode chunk — and later yields are (B, <=chunk).
+
+        With ``scfg.stop_tokens`` set, the chunk loop exits early once
+        every sequence has produced a stop token: the on-device done mask
+        rides the existing per-chunk transfer as one extra packed column,
+        so early exit costs no additional fetches.  (The concatenated
+        yields are then a prefix of ``generate``'s output — truncation at
+        the stop token itself is the caller's policy.)"""
+        scfg = SamplerConfig() if scfg is None else scfg
         if chunk <= 0:
             raise ValueError(f"chunk must be positive, got {chunk}")
         if scfg.max_new_tokens < 1:
@@ -227,17 +275,21 @@ class DecodeEngine:
         tok, caches, pos, key = self._prefill_fn(scfg)(
             self.params, batch, pos_off, jax.random.PRNGKey(seed)
         )
+        done = _hit_stop(tok, scfg)  # stays on device (no transfer)
         pending = tok[:, None]  # first token rides with the first chunk
         remaining = scfg.max_new_tokens - 1
         while remaining > 0:
             step = min(chunk, remaining)
-            toks, (tok, caches, pos, key) = self._chunk_fn(scfg, step)(
-                self.params, tok, caches, pos, key
-            )
+            packed, (tok, caches, pos, key, done) = self._chunk_fn(
+                scfg, step
+            )(self.params, tok, caches, pos, key, done)
             if pending is not None:  # device-side concat: one fetch per chunk
-                toks = jnp.concatenate([pending, toks], axis=1)
+                packed = jnp.concatenate([pending, packed], axis=1)
                 pending = None
-            yield self._fetch(toks)
+            fetched = self._fetch(packed)
+            yield fetched[:, :-1]
             remaining -= step
+            if scfg.stop_tokens and fetched[:, -1].all():
+                return  # every sequence stopped: skip the remaining chunks
         if pending is not None:  # max_new_tokens == 1: prefill sample only
             yield self._fetch(pending)

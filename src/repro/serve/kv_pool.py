@@ -1,0 +1,151 @@
+"""Block-paged KV storage for the serving subsystem.
+
+Dense decode caches are ``(B, max_len, n_kv_heads, head_dim)`` buffers:
+every slot owns ``max_len`` positions whether it uses them or not, so a
+short request admitted next to a long one pays the long one's memory.  The
+paged layout replaces the per-slot buffer with a shared pool
+
+    kpool / vpool : (num_blocks, block_size, n_kv_heads, head_dim)
+    table         : (B, max_blocks) int32  — per-slot block ids
+
+where position ``p`` of slot ``b`` lives at ``(table[b, p // bs], p % bs)``.
+Blocks are handed out by the host-side :class:`BlockAllocator` at admission
+and chunk boundaries and reclaimed on eviction, so KV memory scales with
+the *live* token count, not ``B * max_len``.
+
+This module is deliberately model-agnostic (pure jax + shape arguments, no
+``repro.models`` imports): ``repro.models.attention`` calls :func:`write` /
+:func:`read` from its decode path, and ``repro.models.transformer`` builds
+the per-layer cache dict via :func:`init_paged_attention_cache`.  A cache
+dict containing a ``"table"`` key *is* the paged layout — that key is the
+cache-adapter discriminator the model stack dispatches on.
+
+Numerics contract: :func:`read` gathers a slot's blocks in table order, so
+the gathered ``(B, max_blocks * block_size, H, D)`` view is element-for-
+element the dense cache (up to trailing padding that the position mask
+excludes).  Decode attention over a paged cache is therefore bit-for-bit
+the dense computation — the parity tests in ``tests/test_continuous_
+batching.py`` assert exactly that.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def blocks_for(length: int, block_size: int) -> int:
+    """Number of blocks needed to hold ``length`` positions."""
+    return -(-int(length) // int(block_size))
+
+
+def init_paged_attention_cache(
+    batch: int,
+    max_len: int,
+    n_kv_heads: int,
+    head_dim: int,
+    num_blocks: int,
+    block_size: int,
+    dtype,
+):
+    """(cache, axes) for one paged attention layer.
+
+    ``max_len`` bounds a single slot's sequence (it sizes the table), while
+    ``num_blocks`` sizes the shared pool — the whole point is that
+    ``num_blocks`` can be far less than ``batch * max_blocks``.
+    """
+    if max_len % block_size:
+        raise ValueError(
+            f"max_len ({max_len}) must be a multiple of block_size "
+            f"({block_size}) so prefill pages tile exactly"
+        )
+    max_blocks = blocks_for(max_len, block_size)
+    pool_shape = (num_blocks, block_size, n_kv_heads, head_dim)
+    cache = {
+        "kpool": jnp.zeros(pool_shape, dtype),
+        "vpool": jnp.zeros(pool_shape, dtype),
+        "table": jnp.zeros((batch, max_blocks), jnp.int32),
+    }
+    axes = {
+        # pools carry no batch axis — they are the shared resource
+        "kpool": (None, None, "cache_heads", None),
+        "vpool": (None, None, "cache_heads", None),
+        "table": ("batch", None),
+    }
+    return cache, axes
+
+
+def write(
+    pool: Array,  # (NB, BS, H, D)
+    table: Array,  # (B, MB) int32
+    pos: Array,  # (B,) int32 — write position per slot
+    val: Array,  # (B, H, D) — one token's K or V per slot
+    active: Array | None = None,  # (B,) bool; inactive slots write nothing
+) -> Array:
+    """Scatter one token per slot into its block.  Inactive slots are
+    routed out of bounds and dropped, so a finished request can never
+    scribble into a block that has been reclaimed and reassigned."""
+    bs = pool.shape[1]
+    blk = jnp.take_along_axis(table, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    if active is not None:
+        blk = jnp.where(active, blk, pool.shape[0])  # OOB -> mode="drop"
+    return pool.at[blk, off].set(val.astype(pool.dtype), mode="drop")
+
+
+def read(pool: Array, table: Array) -> Array:
+    """Gather a dense per-slot view: (B, MB * BS, H, D) in position order.
+
+    Unallocated table entries point at block 0; the positions they cover
+    sit beyond the slot's ``pos`` and are excluded by the attention mask,
+    so the garbage is never read into a softmax lane.
+    """
+    g = jnp.take(pool, table, axis=0)  # (B, MB, BS, H, D)
+    b, mb, bs = g.shape[:3]
+    return g.reshape(b, mb * bs, *g.shape[3:])
+
+
+def scatter_prefill(
+    pool: Array,  # (NB, BS, H, D)
+    dense: Array,  # (L, H, D) — one slot's prefilled cache, L % BS == 0
+    block_ids: Array,  # (nb,) int32 — blocks covering positions [0, nb*BS)
+) -> Array:
+    """Install a prefilled dense prefix into the pool page by page."""
+    bs = pool.shape[1]
+    nb = block_ids.shape[0]
+    pages = dense[: nb * bs].reshape(nb, bs, *dense.shape[1:])
+    return pool.at[block_ids].set(pages.astype(pool.dtype))
+
+
+class BlockAllocator:
+    """Host-side free-list over the pool's block ids.
+
+    The allocator is the single source of truth for block ownership: the
+    scheduler allocates at admission / chunk boundaries and frees on
+    eviction.  ``free_count`` + outstanding == ``num_blocks`` always — the
+    reclamation test asserts no blocks leak across a full trace.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))  # pop() -> low ids
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n block ids, or None (and no change) if the pool is exhausted."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, ids) -> None:
+        for i in ids:
+            if not 0 <= i < self.num_blocks:
+                raise ValueError(f"block id {i} out of range")
+            if i in self._free:
+                raise ValueError(f"double free of block {i}")
+        self._free.extend(ids)

@@ -1,0 +1,646 @@
+"""Continuous-batching scheduler: per-request lifecycle over a shared slot
+batch and paged KV pool.
+
+``DecodeEngine`` (the lockstep tier) decodes a fixed batch in lockstep:
+every request burns the full token budget, and a new request waits for the
+whole batch to drain.  ``ContinuousBatchingEngine`` keeps the same compiled
+decode program (fixed ``num_slots``-wide batch, ``lax.scan`` chunks,
+on-device sampling) but gives every slot its own lifecycle:
+
+* **admission** — a queued request is prefilled (batch-1, its exact prompt
+  length: no caller-side padding games), its KV prefix installed into a
+  free slot (scattered into pool blocks under the paged layout), and its
+  per-slot state (position, PRNG key, budget) written device-side.
+* **decode** — one compiled chunk advances all slots together; per-slot
+  positions, EOS/stop-token hits and ``max_new_tokens`` budgets are
+  tracked as on-device masks, and finished slots produce **no cache
+  writes** (that is what makes reclaiming their blocks safe).
+* **eviction** — at the chunk boundary finished requests leave their slot,
+  their blocks return to the allocator's free list, and the next queued
+  request is admitted into the hole.
+
+Determinism contract: each request carries its own seed, and admission
+prefill + per-slot key-splitting reproduce ``DecodeEngine``'s exact
+key-split order for a batch-1 call.  A request's token stream is therefore
+identical to ``DecodeEngine.generate(prompt[None], scfg, seed=seed)`` up
+to stop-token truncation — the parity tests assert this bit-for-bit, for
+both the dense and paged cache layouts.
+
+Host-transfer hygiene: one fetch of the packed ``(B, chunk+1)`` token
+matrix per decode chunk (the last column is the device's post-chunk active
+mask, cross-checked against the host mirror), plus one scalar fetch per
+admission (the prefill-sampled first token).  ``host_transfers`` counts
+them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models.transformer import build_segments
+from repro.serve import kv_pool
+from repro.serve.engine import (
+    SamplerConfig,
+    _hit_stop,
+    _make_prefill_fn,
+    sample_token,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.  ``seed`` makes the stream reproducible and
+    independent of scheduling; ``arrival`` is in the engine's clock units
+    (chunk ticks under the default virtual clock, seconds with a real
+    one)."""
+
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    seed: int = 0
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Host mirror of an admitted request (the device holds the arrays)."""
+
+    request: Request
+    slot: int
+    blocks: list[int]
+    tokens: list[int]
+    n_generated: int
+    admitted_at: float
+    done: bool = False
+    finish_reason: str = ""
+
+    @property
+    def pos(self) -> int:
+        """Next write position = prompt_len + generated so far."""
+        return len(self.request.prompt) + self.n_generated
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishedRequest:
+    uid: int
+    tokens: np.ndarray  # (n,) int32, n <= max_new_tokens
+    finish_reason: str  # "stop" | "length"
+    prompt_len: int
+    arrival: float
+    admitted_at: float
+    finished_at: float
+
+
+# ---------------------------------------------------------------------------
+# Compiled pieces
+# ---------------------------------------------------------------------------
+
+
+def _walk_blocks(cfg: ModelConfig):
+    """(segment index, block key, spec, stacked) for every cache dict in
+    the tree that :func:`repro.models.api.init_cache` builds."""
+    for si, seg in enumerate(build_segments(cfg)):
+        for bi, spec in enumerate(seg.blocks):
+            yield si, f"b{bi}", spec, seg.repeats > 1
+
+
+def _map_blocks(cfg: ModelConfig, fn, *trees):
+    """Apply ``fn(spec, stacked, *block_dicts)`` over parallel cache trees."""
+    out = []
+    for si, key, spec, stacked in _walk_blocks(cfg):
+        while len(out) <= si:
+            out.append({})
+        out[si][key] = fn(spec, stacked, *(t[si][key] for t in trees))
+    return out
+
+
+def _row_set(big: Array, small: Array, slot: Array, stacked: bool) -> Array:
+    """big[..., slot, ...] = small[..., 0, ...] along the batch axis (index
+    1 on layer-stacked leaves, 0 otherwise)."""
+    ax = 1 if stacked else 0
+    idx = (slice(None),) * ax + (slot,)
+    return big.at[idx].set(jnp.take(small, 0, axis=ax).astype(big.dtype))
+
+
+def _make_install_fn(cfg: ModelConfig, nb: int):
+    """Install a batch-1 prefill cache into slot ``slot`` of the big cache
+    tree.  ``nb`` (static) is the number of prompt-covering pages scattered
+    into the pool for paged layers; dense leaves copy the whole row."""
+
+    def install(big, small, slot, table_row):
+        def blockfn(spec, stacked, bigc, smallc):
+            if "table" in bigc:
+                bids = table_row[:nb]
+
+                def scatter(pool, dense):
+                    return kv_pool.scatter_prefill(pool, dense[0], bids)
+
+                if stacked:
+                    scatter = jax.vmap(scatter)
+                ax = 1 if stacked else 0
+                idx = (slice(None),) * ax + (slot,)
+                return {
+                    "kpool": scatter(bigc["kpool"], smallc["k"]),
+                    "vpool": scatter(bigc["vpool"], smallc["v"]),
+                    "table": bigc["table"].at[idx].set(table_row),
+                }
+            return jax.tree.map(
+                lambda b, s: _row_set(b, s, slot, stacked), bigc, smallc
+            )
+
+        return _map_blocks(cfg, blockfn, big, small)
+
+    return install
+
+
+def _make_set_tables_fn(cfg: ModelConfig):
+    """Rewrite one slot's block-table row in every paged layer (block
+    extension at a chunk boundary)."""
+
+    def set_tables(big, slot, table_row):
+        def blockfn(spec, stacked, bigc):
+            if "table" not in bigc:
+                return bigc
+            ax = 1 if stacked else 0
+            idx = (slice(None),) * ax + (slot,)
+            return dict(bigc, table=bigc["table"].at[idx].set(table_row))
+
+        return _map_blocks(cfg, blockfn, big)
+
+    return set_tables
+
+
+def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
+    """``length`` decode steps over the slot batch with per-slot positions,
+    keys, budgets and stop masks.  Returns (packed (B, length+1), caches,
+    state) — the packed matrix's last column is the post-chunk active mask,
+    riding the chunk's single device->host transfer.
+
+    Per-slot sampling vmaps the batch-1 sampler over (key, logits-row)
+    pairs, which is bit-for-bit what ``DecodeEngine`` computes for a
+    batch-1 call with that key — the determinism contract of the module
+    docstring."""
+
+    def chunk(params, caches, state):
+        def step(carry, _):
+            caches, st = carry
+            split = jax.vmap(jax.random.split)(st["key"])  # (B, 2, 2)
+            new_key, sub = split[:, 0], split[:, 1]
+            logits, caches = api.decode_step(
+                params, st["tok"][:, None], caches, st["pos"], cfg,
+                active=st["active"],
+            )
+            logits = logits[:, -1]  # (B, V)
+            nxt = jax.vmap(
+                lambda s, l: sample_token(s, l[None], scfg)[0]
+            )(sub, logits)
+            nxt = jnp.where(st["active"], nxt, st["tok"])
+            act = st["active"].astype(jnp.int32)
+            ngen = st["ngen"] + act
+            alive = (
+                st["active"]
+                & ~_hit_stop(nxt, scfg)
+                & (ngen < st["budget"])
+            )
+            st = {
+                "tok": nxt,
+                "pos": st["pos"] + act,
+                "key": new_key,
+                "active": alive,
+                "ngen": ngen,
+                "budget": st["budget"],
+            }
+            return (caches, st), nxt
+
+        (caches, st), toks = jax.lax.scan(
+            step, (caches, state), None, length=length
+        )
+        toks = jnp.moveaxis(toks, 0, 1)  # (B, length)
+        packed = jnp.concatenate(
+            [toks, st["active"][:, None].astype(toks.dtype)], axis=1
+        )
+        return packed, caches, st
+
+    return chunk
+
+
+def _admit_state(state, slot, tok0, key, pos0, budget):
+    """Write one slot's device-side lifecycle state (ngen starts at 1: the
+    prefill-sampled first token is emitted at admission)."""
+    return {
+        "tok": state["tok"].at[slot].set(tok0),
+        "pos": state["pos"].at[slot].set(pos0),
+        "key": state["key"].at[slot].set(key),
+        "active": state["active"].at[slot].set(True),
+        "ngen": state["ngen"].at[slot].set(1),
+        "budget": state["budget"].at[slot].set(budget),
+    }
+
+
+def _deactivate(state, slot):
+    return dict(state, active=state["active"].at[slot].set(False))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class ContinuousBatchingEngine:
+    """Serving tier 3: request queue + slot admission/eviction over one
+    compiled fixed-width decode program (see module docstring).
+
+    Parameters
+    ----------
+    num_slots : compiled batch width — concurrent in-flight requests.
+    max_len : per-slot sequence capacity (prompt + generated).
+    scfg : engine-level sampling signature (temperature / top_k /
+        stop_tokens).  Per-request knobs are ``max_new_tokens`` and
+        ``seed``; the sampler signature is baked into the compiled program.
+    layout : "paged" (global-attention KV in a shared block pool) or
+        "dense" (per-slot buffers).  Interchangeable — same token streams.
+    num_blocks : pool size per paged layer; defaults to full occupancy
+        (``num_slots * max_len / block_size``).  Smaller pools admit fewer
+        long requests at once; if blocks run out mid-flight the youngest
+        request is preempted back to the queue (restart-from-scratch is
+        deterministic, so its stream is unchanged).
+    clock : optional callable returning the current time in seconds; by
+        default a virtual clock advances one tick per decode chunk and
+        ``Request.arrival`` is in ticks.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        num_slots: int,
+        max_len: int,
+        scfg: Optional[SamplerConfig] = None,
+        *,
+        layout: str = "paged",
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        chunk: int = 8,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        if cfg.family == "encdec":
+            raise NotImplementedError("continuous batching is decoder-only")
+        if layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache layout {layout!r}")
+        if layout == "paged" and max_len % block_size:
+            raise ValueError("max_len must be a multiple of block_size")
+        self.params, self.cfg = params, cfg
+        self.num_slots, self.max_len = num_slots, max_len
+        self.scfg = scfg or SamplerConfig()
+        self.layout, self.block_size, self.chunk = layout, block_size, chunk
+        self.max_blocks = kv_pool.blocks_for(max_len, block_size)
+        self.num_blocks = num_blocks or num_slots * self.max_blocks
+        self.allocator = (
+            kv_pool.BlockAllocator(self.num_blocks)
+            if layout == "paged" else None
+        )
+        self._clock = clock
+        self._now = 0.0  # virtual clock (chunk ticks) when clock is None
+        self.host_transfers = 0
+        self.preemptions = 0
+
+        self._queue: list[Request] = []
+        self._slots: list[Optional[RequestState]] = [None] * num_slots
+        self._uid_counter = 0  # monotonic: uids never recycle
+        self._stop_set = set(int(t) for t in self.scfg.stop_tokens)
+
+        self._caches = self._init_big_caches()
+        b = num_slots
+        self._state = {
+            "tok": jnp.zeros((b,), jnp.int32),
+            "pos": jnp.zeros((b,), jnp.int32),
+            "key": jnp.zeros((b, 2), jnp.uint32),
+            "active": jnp.zeros((b,), bool),
+            "ngen": jnp.zeros((b,), jnp.int32),
+            "budget": jnp.zeros((b,), jnp.int32),
+        }
+
+        self._prefill = jax.jit(
+            _make_prefill_fn(cfg, max_len, self.scfg)
+        )  # retraces per prompt length, one jit object
+        self._chunk_fn = jax.jit(
+            _make_cb_chunk_fn(cfg, self.scfg, chunk)
+        )
+        self._install_fns: dict[int, Callable] = {}
+        self._set_tables = jax.jit(_make_set_tables_fn(cfg))
+        self._admit_jit = jax.jit(_admit_state)
+        self._deactivate_jit = jax.jit(_deactivate)
+
+    # -- construction -------------------------------------------------------
+
+    def _init_big_caches(self):
+        """Big cache tree: shapes from a batch-``num_slots`` init, leaf
+        dtypes taken from what prefill actually produces (so installing a
+        prefilled row never casts — bit parity with ``DecodeEngine``,
+        whose caches come straight out of prefill)."""
+        cfg, b = self.cfg, self.num_slots
+        dummy = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+        small = jax.eval_shape(
+            lambda p, t: api.prefill(p, t, cfg, self.max_len)[1],
+            self.params, dummy,
+        )
+
+        def blockfn(spec, stacked, smallc):
+            ax = 1 if stacked else 0
+            if (
+                self.layout == "paged"
+                and spec.mixer == "attn"
+                and spec.window == 0
+            ):
+                cache, _ = kv_pool.init_paged_attention_cache(
+                    b, self.max_len, cfg.n_kv_heads, cfg.head_dim,
+                    self.num_blocks, self.block_size, smallc["k"].dtype,
+                )
+                if stacked:
+                    r = smallc["k"].shape[0]
+                    cache = jax.tree.map(
+                        lambda t: jnp.broadcast_to(t[None], (r,) + t.shape),
+                        cache,
+                    )
+                return cache
+            return jax.tree.map(
+                lambda l: jnp.zeros(
+                    l.shape[:ax] + (b,) + l.shape[ax + 1:], l.dtype
+                ),
+                smallc,
+            )
+
+        return _map_blocks(cfg, blockfn, small)
+
+    # -- host boundary ------------------------------------------------------
+
+    def _fetch(self, x) -> np.ndarray:
+        self.host_transfers += 1
+        return np.asarray(x)
+
+    def now(self) -> float:
+        return self._clock() if self._clock is not None else self._now
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: Optional[int] = None,
+        seed: int = 0,
+        uid: Optional[int] = None,
+        arrival: float = 0.0,
+    ) -> int:
+        """Queue a request; returns its uid.  Validates that the request
+        can ever fit: prompt + budget within a slot's capacity, and (paged)
+        within the whole pool."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        budget = (
+            self.scfg.max_new_tokens if max_new_tokens is None
+            else max_new_tokens
+        )
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if budget < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
+        total = len(prompt) + budget
+        if total > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + budget ({budget}) exceeds the "
+                f"slot capacity max_len={self.max_len}"
+            )
+        if self.allocator is not None:
+            need = kv_pool.blocks_for(total, self.block_size)
+            if need > self.num_blocks:
+                raise ValueError(
+                    f"request needs {need} blocks but the pool has only "
+                    f"{self.num_blocks}"
+                )
+        if uid is None:
+            uid = self._uid_counter
+        self._uid_counter = max(self._uid_counter, uid + 1)
+        self._queue.append(
+            Request(uid, prompt, budget, seed=seed, arrival=arrival)
+        )
+        return uid
+
+    def run(self) -> list[FinishedRequest]:
+        """Process the queue to completion; FinishedRequests in completion
+        order."""
+        finished: list[FinishedRequest] = []
+        while self._queue or self._live():
+            finished.extend(self.step())
+        return finished
+
+    def step(self) -> list[FinishedRequest]:
+        """One scheduling tick: admit arrived requests, ensure pool blocks
+        for the coming chunk, run one compiled decode chunk, evict finished
+        requests.  Returns the requests that finished this tick."""
+        finished = list(self._admit_arrived())
+        if not self._live():
+            if self._queue:
+                self._advance_clock()
+            return finished
+        if self.allocator is not None:
+            self._ensure_blocks()
+        packed = self._fetch(self._run_chunk())
+        if self._clock is None:
+            self._now += 1.0
+        finished.extend(self._process_chunk(packed))
+        return finished
+
+    # -- scheduling internals ----------------------------------------------
+
+    def _live(self) -> list[RequestState]:
+        return [rs for rs in self._slots if rs is not None]
+
+    def _advance_clock(self) -> None:
+        """Nothing in flight: jump (virtual) or wait (real) to the next
+        arrival."""
+        nxt = min(r.arrival for r in self._queue)
+        if self._clock is None:
+            self._now = max(self._now, float(nxt))
+        else:
+            import time
+
+            time.sleep(max(0.0, min(nxt - self.now(), 0.05)))
+
+    def _admit_arrived(self) -> list[FinishedRequest]:
+        """FIFO-admit every arrived request that fits a free slot (and, if
+        paged, whose prompt blocks are available).  Requests whose first
+        token already finishes them (budget 1 / instant stop) complete
+        here and never occupy a slot."""
+        finished = []
+        while True:
+            free = [i for i, rs in enumerate(self._slots) if rs is None]
+            if not free:
+                break
+            ready = [r for r in self._queue if r.arrival <= self.now()]
+            if not ready:
+                break
+            req = ready[0]
+            blocks: list[int] = []
+            if self.allocator is not None:
+                nb = kv_pool.blocks_for(len(req.prompt), self.block_size)
+                got = self.allocator.alloc(nb)
+                if got is None:
+                    break  # pool full: wait for evictions, don't preempt
+                blocks = got
+            self._queue.remove(req)
+            done = self._admit(req, free[0], blocks)
+            if done is not None:
+                finished.append(done)
+        return finished
+
+    def _admit(
+        self, req: Request, slot: int, blocks: list[int]
+    ) -> Optional[FinishedRequest]:
+        tok0_d, small, pos0, key = self._prefill(
+            self.params,
+            {"tokens": jnp.asarray(req.prompt[None])},
+            jnp.asarray(0, jnp.int32),
+            jax.random.PRNGKey(req.seed),
+        )
+        tok0 = int(self._fetch(tok0_d)[0])  # one scalar per admission
+        now = self.now()
+        if tok0 in self._stop_set or req.max_new_tokens == 1:
+            reason = "stop" if tok0 in self._stop_set else "length"
+            if blocks:
+                self.allocator.free(blocks)
+            return FinishedRequest(
+                req.uid, np.asarray([tok0], np.int32), reason,
+                len(req.prompt), req.arrival, now, now,
+            )
+        table_row = self._table_row(blocks)
+        nb = len(blocks)
+        if nb not in self._install_fns:
+            self._install_fns[nb] = jax.jit(
+                _make_install_fn(self.cfg, nb)
+            )
+        self._caches = self._install_fns[nb](
+            self._caches, small, jnp.asarray(slot), table_row
+        )
+        self._state = self._admit_jit(
+            self._state, jnp.asarray(slot), tok0_d[0], key, pos0,
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+        )
+        self._slots[slot] = RequestState(
+            request=req, slot=slot, blocks=blocks, tokens=[tok0],
+            n_generated=1, admitted_at=now,
+        )
+        return None
+
+    def _table_row(self, blocks: list[int]) -> Array:
+        row = np.zeros((self.max_blocks,), np.int32)
+        row[: len(blocks)] = blocks
+        return jnp.asarray(row)
+
+    def _ensure_blocks(self) -> None:
+        """Grow each live slot's block list to cover the coming chunk,
+        preempting the youngest request if the pool runs dry."""
+        for rs in sorted(self._live(), key=lambda r: r.admitted_at):
+            if self._slots[rs.slot] is not rs:
+                continue  # preempted by an earlier iteration of this loop
+            total_cap = len(rs.request.prompt) + rs.request.max_new_tokens
+            need = kv_pool.blocks_for(
+                min(rs.pos + self.chunk, total_cap), self.block_size
+            )
+            while need > len(rs.blocks):
+                got = self.allocator.alloc(need - len(rs.blocks))
+                if got is None:
+                    victim = self._pick_victim()
+                    if victim is None:
+                        raise RuntimeError(
+                            "KV pool exhausted and nothing to preempt — "
+                            "pool too small for the admitted working set"
+                        )
+                    self._preempt(victim)
+                    if victim is rs:
+                        break  # the requester itself was youngest: requeued
+                    continue
+                rs.blocks.extend(got)
+                self._caches = self._set_tables(
+                    self._caches, jnp.asarray(rs.slot),
+                    self._table_row(rs.blocks),
+                )
+
+    def _pick_victim(self):
+        """Youngest live request — including the one asking for blocks:
+        preempting the youngest always discards the least progress, and it
+        guarantees the oldest request keeps advancing (a lone request
+        always fits the pool by the submit-time check, so the scheduler
+        cannot livelock)."""
+        live = self._live()
+        return max(live, key=lambda r: r.admitted_at) if live else None
+
+    def _preempt(self, rs: RequestState) -> None:
+        """Return a request to the queue head; its blocks are reclaimed and
+        it restarts from scratch on re-admission (same seed -> same token
+        stream, so preemption is invisible in the output)."""
+        self.preemptions += 1
+        self._state = self._deactivate_jit(
+            self._state, jnp.asarray(rs.slot)
+        )
+        if rs.blocks:
+            self.allocator.free(rs.blocks)
+        self._slots[rs.slot] = None
+        self._queue.insert(0, rs.request)
+
+    def _run_chunk(self):
+        packed, self._caches, self._state = self._chunk_fn(
+            self.params, self._caches, self._state
+        )
+        return packed
+
+    def _process_chunk(self, packed: np.ndarray) -> list[FinishedRequest]:
+        """Mirror the device's per-step lifecycle over the fetched token
+        matrix, then evict finished slots and reclaim their blocks."""
+        steps = packed.shape[1] - 1
+        for step in range(steps):
+            for rs in self._live():
+                if rs.done:
+                    continue
+                tok = int(packed[rs.slot, step])
+                rs.tokens.append(tok)
+                rs.n_generated += 1
+                if tok in self._stop_set:
+                    rs.done, rs.finish_reason = True, "stop"
+                elif rs.n_generated >= rs.request.max_new_tokens:
+                    rs.done, rs.finish_reason = True, "length"
+        device_active = packed[:, -1].astype(bool)
+        finished = []
+        now = self.now()
+        for rs in self._live():
+            if bool(device_active[rs.slot]) != (not rs.done):
+                raise AssertionError(
+                    f"slot {rs.slot}: device active mask disagrees with "
+                    "the host lifecycle mirror"
+                )
+            if not rs.done:
+                continue
+            if rs.blocks:
+                self.allocator.free(rs.blocks)
+            self._slots[rs.slot] = None
+            req = rs.request
+            finished.append(
+                FinishedRequest(
+                    req.uid, np.asarray(rs.tokens, np.int32),
+                    rs.finish_reason, len(req.prompt), req.arrival,
+                    rs.admitted_at, now,
+                )
+            )
+        return finished

@@ -77,7 +77,7 @@ class BatchedServer:
     def generate(
         self,
         prompts: Array,  # (B, S) int32, right-aligned equal-length prompts
-        scfg: SamplerConfig = SamplerConfig(),
+        scfg: Optional[SamplerConfig] = None,
         extra_inputs: Optional[dict] = None,
         seed: int = 0,
     ) -> np.ndarray:
@@ -86,7 +86,7 @@ class BatchedServer:
     def generate_stream(
         self,
         prompts: Array,
-        scfg: SamplerConfig = SamplerConfig(),
+        scfg: Optional[SamplerConfig] = None,
         extra_inputs: Optional[dict] = None,
         seed: int = 0,
         chunk: int = 8,
@@ -97,7 +97,7 @@ class BatchedServer:
     def generate_python_loop(
         self,
         prompts: Array,
-        scfg: SamplerConfig = SamplerConfig(),
+        scfg: Optional[SamplerConfig] = None,
         extra_inputs: Optional[dict] = None,
         seed: int = 0,
     ) -> np.ndarray:
@@ -107,6 +107,7 @@ class BatchedServer:
         paths produce identical tokens for a given seed (prefill and decode
         logits share the (B, V) contract, and the key-split order matches
         the engine's)."""
+        scfg = SamplerConfig() if scfg is None else scfg
         if scfg.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"

@@ -4,6 +4,11 @@ import os
 # scoped to launch/dryrun.py per the assignment).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Keep test runs hermetic: no reads/writes of the user-level decode-tile
+# autotune cache (tests that exercise persistence re-enable it against a
+# tmpdir, see test_tile_cache.py).
+os.environ.setdefault("REPRO_TILE_CACHE", "0")
+
 import jax
 
 jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,36 @@
+"""Tier-1 smoke for the serving benchmark: the whole lockstep-vs-continuous
+comparison runs (CPU, tiny config, short Poisson trace) and reports
+throughput + latency percentiles for both paths."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def test_bench_serving_smoke(capsys):
+    from benchmarks import bench_serving
+
+    rows = bench_serving.run(smoke=True, n_requests=4)
+    names = [r.split(",")[0] for r in rows]
+    assert "serving/lockstep" in names
+    assert "serving/continuous" in names
+    assert "serving/pool" in names
+    by_name = dict(zip(names, rows))
+    # both paths report tokens/sec and latency percentiles
+    for name in ("serving/lockstep", "serving/continuous"):
+        assert "tok_s=" in by_name[name]
+        assert "p50_ms=" in by_name[name] and "p95_ms=" in by_name[name]
+    # the paged pool leaks no blocks over the trace
+    derived = by_name["serving/pool"].split(",", 2)[2]
+    fields = dict(kv.split("=") for kv in derived.split(";"))
+    assert fields["blocks"] == fields["free"]
+
+
+def test_trace_is_deterministic_per_seed():
+    from benchmarks import bench_serving
+
+    a = bench_serving.make_trace(5, 3, 0.01, (4, 6), (4, 8))
+    b = bench_serving.make_trace(5, 3, 0.01, (4, 6), (4, 8))
+    assert [r["arrival"] for r in a] == [r["arrival"] for r in b]
+    assert all((x["prompt"] == y["prompt"]).all() for x, y in zip(a, b))

@@ -1,6 +1,8 @@
 """Compiled decode engine: scan/loop equivalence, the single host-transfer
 invariant, streaming, and the (B, V) logits contract."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -77,6 +79,54 @@ def test_engine_standalone_api(prompts):
                                               temperature=0.0))
     assert out.shape == (3, 3)
     assert (out >= 0).all() and (out < CFG.vocab_size).all()
+
+
+def test_stream_early_exits_on_stop_tokens(server, prompts):
+    """Once every sequence has produced a stop token, the chunk loop ends:
+    fewer yields, fewer transfers — and the done mask rides the existing
+    per-chunk transfer (still exactly one fetch per chunk)."""
+    base = SamplerConfig(max_new_tokens=12, temperature=0.0)
+    full = server.generate(prompts, base)
+    # every row has emitted one of these by step 3 -> all-done after chunk 1
+    stops = tuple(int(t) for t in np.unique(full[:, :3]))
+    scfg = SamplerConfig(max_new_tokens=12, temperature=0.0,
+                         stop_tokens=stops)
+    before = server.engine.host_transfers
+    chunks = list(server.generate_stream(prompts, scfg, chunk=3))
+    assert len(chunks) == 1  # early exit: 1 chunk instead of 4
+    assert server.engine.host_transfers - before == 1
+    # the emitted prefix is untruncated generate output (truncation at the
+    # stop token itself is caller policy)
+    np.testing.assert_array_equal(chunks[0], full[:, :4])
+
+
+def test_stream_without_stop_tokens_runs_full_budget(server, prompts):
+    """No stop tokens -> behavior unchanged: all chunks, full budget."""
+    scfg = SamplerConfig(max_new_tokens=12, temperature=0.0)
+    chunks = list(server.generate_stream(prompts, scfg, chunk=3))
+    assert [c.shape[1] for c in chunks] == [4, 3, 3, 2]
+
+
+def test_sampler_config_not_shared_mutable_default():
+    """Regression: the old ``scfg: SamplerConfig = SamplerConfig()``
+    default was a single shared instance across all calls."""
+    import inspect
+
+    from repro.serve.scheduler import ContinuousBatchingEngine
+
+    for fn in (
+        DecodeEngine.generate,
+        DecodeEngine.generate_stream,
+        BatchedServer.generate,
+        BatchedServer.generate_stream,
+        BatchedServer.generate_python_loop,
+        ContinuousBatchingEngine.__init__,
+    ):
+        default = inspect.signature(fn).parameters["scfg"].default
+        assert default is None, f"{fn.__qualname__} shares a SamplerConfig"
+    # and the config itself is now immutable, killing the bug class
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        SamplerConfig().temperature = 0.1
 
 
 def test_serve_step_logits_contract():

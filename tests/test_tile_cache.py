@@ -1,0 +1,76 @@
+"""Decode-tile autotune persistence: swept winners survive a (simulated)
+process restart via the per-backend JSON cache."""
+
+import json
+
+import pytest
+
+from repro.kernels import ops, tile_cache
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Route the on-disk cache into a tmpdir and reset ops' in-process
+    state around each test (conftest disables persistence globally)."""
+    monkeypatch.setenv("REPRO_TILE_CACHE", "1")
+    monkeypatch.setenv("REPRO_TILE_CACHE_DIR", str(tmp_path))
+    saved = dict(ops._DECODE_TILE_CACHE)
+    saved_loaded = ops._TILE_CACHE_LOADED
+    ops._DECODE_TILE_CACHE.clear()
+    ops._TILE_CACHE_LOADED = False
+    yield tmp_path
+    ops._DECODE_TILE_CACHE.clear()
+    ops._DECODE_TILE_CACHE.update(saved)
+    ops._TILE_CACHE_LOADED = saved_loaded
+
+
+def test_store_load_roundtrip(tmp_cache):
+    table = {("w1a8_gemv", 8, 64, 32): (16, 32),
+             ("decoupled_gemv", 8, 64, 32, 16): (64, 16)}
+    tile_cache.store("cpu", table)
+    assert tile_cache.load("cpu") == table
+    # per-backend files are independent
+    assert tile_cache.load("tpu") == {}
+
+
+def test_store_merges_with_existing(tmp_cache):
+    tile_cache.store("cpu", {("w1a8_gemv", 8, 64, 32): (16, 32)})
+    tile_cache.store("cpu", {("w1a8_gemv", 8, 128, 32): (32, 32)})
+    assert len(tile_cache.load("cpu")) == 2
+
+
+def test_corrupt_file_is_ignored(tmp_cache):
+    path = tile_cache.cache_path("cpu")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("{not json")
+    assert tile_cache.load("cpu") == {}
+    # and storing over it recovers
+    tile_cache.store("cpu", {("w1a8_gemv", 8, 64, 32): (16, 32)})
+    assert len(tile_cache.load("cpu")) == 1
+
+
+def test_disabled_by_env(tmp_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_TILE_CACHE", "0")
+    tile_cache.store("cpu", {("w1a8_gemv", 8, 64, 32): (16, 32)})
+    assert not tile_cache.cache_path("cpu").exists()
+    assert tile_cache.load("cpu") == {}
+
+
+def test_sweep_winner_survives_restart(tmp_cache):
+    """sweep -> winner on disk; clearing the in-process table (a process
+    restart) and asking decode_tiles finds the persisted winner instead of
+    the divisor heuristic default."""
+    m, k, n = 1, 16, 16
+    best = ops.sweep_decode_tiles(
+        m, k, n, bk_candidates=(8, 16), bn_candidates=(8, 16),
+        warmup=0, iters=1,
+    )
+    key = ("w1a8_gemv", m + (-m) % 8, k, n)
+    on_disk = tile_cache.load("cpu")
+    assert on_disk[key] == tuple(best)
+    # simulated restart
+    ops._DECODE_TILE_CACHE.clear()
+    ops._TILE_CACHE_LOADED = False
+    assert ops.decode_tiles(m + (-m) % 8, k, n) == tuple(best)
+    payload = json.loads(tile_cache.cache_path("cpu").read_text())
+    assert f"w1a8_gemv|{m + (-m) % 8}|{k}|{n}" in payload
