@@ -1,18 +1,24 @@
-"""Decode-path benchmark: Python per-token loop vs the compiled engine.
+"""Decode-path benchmark: Python per-token loop vs the compiled engine,
+fake-quant vs packed-integer weights.
 
 Rows (``name,us_per_call,derived`` — us_per_call is per-TOKEN latency):
   decode/python_loop          legacy loop (jitted step + host sync per token)
   decode/engine               compiled prefill + lax.scan generation
+  decode/engine_packed        same engine on quantize_params_for_serving
+                              (packed=True) weights: decode steps run the
+                              w1a8_gemv / decoupled_gemv kernel tier
   decode/engine_stream        chunked streaming variant
   decode/host_transfers       device->host transfers per engine call (== 1)
   decode/gemv_tier            ops decode tier (fused act-quant w1a8_gemv)
   decode/prefill_tier         same shape through the M-tiled prefill kernel
 
-The engine rows quantify what moving the loop on-device buys; the kernel
-rows what the decode-shaped GEMV tier buys over padding decode rows into
-prefill tiles.  ``--smoke`` runs a seconds-scale subset (no kernel
-micro-bench — interpret mode is not a timing signal) so CI exercises the
-whole path without TPU hardware.
+The engine rows quantify what moving the loop on-device buys; the packed
+row what computing on stored integers buys over fake-quant float matmuls
+(on CPU the kernels run in interpret mode, so that row is a wiring check
+there, not a timing signal); the kernel rows what the decode-shaped GEMV
+tier buys over padding decode rows into prefill tiles.  ``--smoke`` runs a
+seconds-scale subset (no kernel micro-bench) so CI exercises the whole
+path — including the packed engine — without TPU hardware.
 """
 
 from __future__ import annotations
@@ -55,7 +61,7 @@ def run(smoke: bool = False, batch: int = 4, prompt_len: int = 16,
     new_tokens = new_tokens or (8 if smoke else 48)
     iters = iters or (1 if smoke else 3)
     cfg = tiny_config(d_model=64, d_ff=128, n_layers=2, vocab=256)
-    params, _ = api.init_model(jax.random.PRNGKey(0), cfg)
+    params, axes = api.init_model(jax.random.PRNGKey(0), cfg)
     server = BatchedServer(params, cfg, max_len=prompt_len + new_tokens + 1)
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
@@ -74,6 +80,18 @@ def run(smoke: bool = False, batch: int = 4, prompt_len: int = 16,
     rows.append(row(
         "decode/engine", us_en / new_tokens,
         f"tok_s={tok_s(us_en):.1f};speedup={us_py / us_en:.2f}x",
+    ))
+
+    from repro.train.quantized_serving import quantize_params_for_serving
+
+    qparams, _ = quantize_params_for_serving(params, axes, cfg, packed=True)
+    packed_server = BatchedServer(
+        qparams, cfg, max_len=prompt_len + new_tokens + 1
+    )
+    us_pk = timed(lambda: packed_server.generate(prompts, scfg))
+    rows.append(row(
+        "decode/engine_packed", us_pk / new_tokens,
+        f"tok_s={tok_s(us_pk):.1f};vs_fakequant={us_en / us_pk:.2f}x",
     ))
 
     us_st = timed(lambda: list(server.generate_stream(prompts, scfg, chunk=8)))

@@ -9,6 +9,10 @@ Rows (``name,us_per_call,derived`` — us_per_call is p50 request latency):
                         continuous engine removes)
   serving/continuous    ContinuousBatchingEngine: per-request admission at
                         chunk boundaries over the paged KV pool
+  serving/continuous_packed  same engine on quantize_params_for_serving
+                        (packed=True) weights — decode chunks execute the
+                        W1A8 GEMV kernel tier (interpret mode on CPU: a
+                        wiring check there, a bandwidth story on TPU)
   serving/pool          paged-pool accounting for the continuous run
 
 derived carries tokens/sec over the trace makespan (useful tokens only:
@@ -107,7 +111,7 @@ def run(smoke: bool = False, num_slots: int | None = None,
     max_len = max(prompt_lens) + max(budgets)
     block = 4
     max_len += (-max_len) % block
-    params, _ = api.init_model(jax.random.PRNGKey(0), cfg)
+    params, axes = api.init_model(jax.random.PRNGKey(0), cfg)
     scfg = SamplerConfig(temperature=0.0, top_k=0,
                          max_new_tokens=max(budgets))
     trace = make_trace(n_requests, seed, 0.02 if smoke else 0.05,
@@ -153,6 +157,28 @@ def run(smoke: bool = False, num_slots: int | None = None,
         "serving/pool", 0.0,
         f"blocks={eng.num_blocks};free={eng.allocator.free_count};"
         f"preemptions={eng.preemptions};host_transfers={eng.host_transfers}",
+    ))
+
+    from repro.train.quantized_serving import quantize_params_for_serving
+
+    # the fake-quant engines are done (their rows are emitted): drop them
+    # before building the packed engine so only one KV pool is ever live
+    del eng, server
+    qparams, _ = quantize_params_for_serving(params, axes, cfg, packed=True)
+    peng = ContinuousBatchingEngine(
+        qparams, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,
+        layout="paged", block_size=block, chunk=chunk,
+        clock=lambda: time.perf_counter() - box["t0"],
+    )
+    box["t0"] = time.perf_counter()
+    _run_continuous(peng, [dict(r, arrival=0.0) for r in warm], box["t0"])
+    box["t0"] = t0 = time.perf_counter()
+    plat, ptoks, pspan = _run_continuous(peng, trace, t0)
+    pp50, pp95 = _percentiles(plat)
+    rows.append(row(
+        "serving/continuous_packed", pp50 * 1e3,
+        f"tok_s={ptoks / pspan:.1f};p50_ms={pp50:.1f};p95_ms={pp95:.1f};"
+        f"vs_fakequant_tok_s={ctoks / cspan:.1f}",
     ))
     return rows
 

@@ -15,8 +15,13 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §6):
 """
 
 import argparse
+import pathlib
 import sys
 import time
+
+# allow `python benchmarks/run.py` from the repo root (the benchmarks
+# package is importable either way)
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
@@ -24,6 +29,10 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run a single benchmark id")
     ap.add_argument("--steps", type=int, default=120,
                     help="training steps for the learning benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI subset: the serving-path suites "
+                         "(decode incl. packed weights, continuous "
+                         "batching) plus the allocation-free memory rows")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -53,6 +62,12 @@ def main() -> None:
         "sensitivity": lambda: bench_sensitivity.run(steps=max(60, args.steps // 2)),
         "stability": lambda: bench_stability.run(steps=max(80, args.steps // 2)),
     }
+    if args.smoke:
+        suites = {
+            "memory": lambda: bench_memory.run(),
+            "decode": lambda: bench_decode.run(smoke=True),
+            "serving": lambda: bench_serving.run(smoke=True),
+        }
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -9,7 +9,8 @@ Python loop and prints the speedup; ``--stream`` prints tokens chunk by
 chunk as the engine produces them; ``--continuous`` serves the same
 prompts through the continuous-batching engine instead (ragged prompts,
 per-request budgets/seeds, paged KV pool — each request's stream matches
-the lockstep engine's for its seed).
+the lockstep engine's for its seed); ``--packed`` serves the bit-packed
+integer export, so every decode linear runs the W1A8 GEMV kernel tier.
 
 Without --ckpt it serves a freshly initialised reduced model (tokens are
 synthetic ids); with a checkpoint from train_lm.py it decodes that model.
@@ -46,6 +47,10 @@ def main():
                     help="serve via the continuous-batching engine "
                          "(ragged prompts, paged KV pool)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--packed", action="store_true",
+                    help="export weights to the packed integer serving "
+                         "layout first: decode runs the W1A8 GEMV kernel "
+                         "tier on stored integers (paper Appendix A)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -62,6 +67,14 @@ def main():
     else:
         params, _ = api.init_model(key, cfg)
         print("serving a randomly initialised reduced model")
+
+    if args.packed:
+        from repro.train.quantized_serving import quantize_params_for_serving
+
+        _, axes = api.params_shape_and_axes(cfg)
+        params, _ = quantize_params_for_serving(params, axes, cfg,
+                                                packed=True)
+        print("serving the packed integer export (W1A8 kernel tier)")
 
     scfg = SamplerConfig(temperature=0.8, top_k=40,
                          max_new_tokens=args.new_tokens)

@@ -3,8 +3,10 @@ sensitivity analysis, and inference bit-packing."""
 
 from repro.core.quantization import (  # noqa: F401
     QuantConfig,
+    act_scale_int8,
     binarize_weights,
     ternarize_weights,
+    quantize_act_int8,
     quantize_activations_int8,
     quantize_weights_int8,
     effective_bits,

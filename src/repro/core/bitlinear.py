@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core.quantization import (
     QuantConfig,
     fake_quant_linear_weights,
+    is_packed_1bit,
     maybe_quant_acts,
 )
 
@@ -75,6 +76,14 @@ def bitlinear(
     if sublayer_norm is not None:
         x = rmsnorm(sublayer_norm, x)
     w = params["w"]
+    if is_packed_1bit(w):
+        # packed serving layout: run the true-integer W1A8 kernel tier
+        # (act-quant fused; decode shapes hit the GEMV kernels) instead of
+        # dequantize-then-float-matmul.
+        from repro.kernels import ops  # deferred: kernels are serving-only
+
+        return ops.bit_linear_infer(x, w["packed"], w["scale"],
+                                    out_dtype=x.dtype)
     if cfg.mode == "none" and not isinstance(w, dict):
         return x @ w.astype(x.dtype)
     xq = maybe_quant_acts(x, cfg)

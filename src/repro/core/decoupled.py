@@ -27,6 +27,8 @@ from repro.core.bitlinear import init_linear, init_rmsnorm, rmsnorm
 from repro.distributed.sharding import shard_hint
 from repro.core.quantization import (
     QuantConfig,
+    is_packed_1bit,
+    is_stored_int8,
     maybe_quant_acts,
     quantize_weights_int8_stacked,
     fake_quant_linear_weights,
@@ -136,6 +138,96 @@ def set_feature_scaling(params, alpha: float, beta: float):
     return params
 
 
+# ---------------------------------------------------------------------------
+# Packed serving path (true-integer kernel tier)
+# ---------------------------------------------------------------------------
+
+
+def _int8_kernel_view(w: dict):
+    """Serving {"q", "scale"} (possibly 1-stacked over experts) ->
+    (q 2-D int8, kernel wscale).  ``scale`` is stored as the dequant
+    multiplier (deq = q * scale); the int8 kernels fold the *quant*
+    multiplier (deq = q / wscale) into their epilogue, so pass 1/scale."""
+    q, s = w["q"], w["scale"]
+    if q.ndim == 3:
+        q, s = q[0], s[0]
+    return q, 1.0 / s.reshape(())
+
+
+def _serving_ffn_layout(params, glu: bool) -> bool:
+    """True when the FFN has a single-expert INT8 serving branch and (if a
+    1-bit trunk exists) a fully packed trunk — the layouts
+    :func:`_ffn_packed_apply` fuses.  Routed (N > 1) 8-bit branches keep
+    the float dequant path (routing gathers per-expert token groups; the
+    decode hot path is N == 1), and 1-bit-only layouts go through
+    :func:`_branch1_apply`'s packed arm instead — one copy of the packed
+    trunk sequence."""
+    if "w8_up" not in params:
+        return False
+    names = ("w8_gate", "w8_up", "w8_down") if glu else ("w8_up", "w8_down")
+    if not all(
+        is_stored_int8(params[n]) and params[n]["q"].shape[0] == 1
+        for n in names
+    ):
+        return False
+    if "w1_up" in params:
+        names = ("w1_gate", "w1_up", "w1_down") if glu else ("w1_up", "w1_down")
+        if not all(is_packed_1bit(params[n]) for n in names):
+            return False
+    return True
+
+
+def _ffn_packed_apply(params, xf: Array, glu: bool, act_fn) -> Array:
+    """Decoupled FFN on serving-layout weights (8-bit branch present, per
+    :func:`_serving_ffn_layout`): integers stay packed in HBM and every
+    linear runs through the kernel tier (``decoupled_first_gemm`` fuses
+    each 1-bit/8-bit up-projection pair so the activations are read once;
+    decode-shaped rows hit the fused-act-quant GEMV kernels).
+
+    Feature scaling (alpha/beta) is applied to the branch *outputs*, exactly
+    where the fake-quant path applies it, so the two paths share one
+    quantization grid and differ only by integer-vs-float accumulation.
+    """
+    from repro.kernels import ops  # deferred: kernels are serving-only
+
+    has_1bit = "w1_up" in params
+    dt = xf.dtype
+    one = jnp.ones((), jnp.float32)
+
+    def bit_lin(name, h):
+        w = params[name]
+        return ops.bit_linear_infer(h, w["packed"], w["scale"], out_dtype=dt)
+
+    def int8_lin(name, h):
+        q, s = _int8_kernel_view(params[name])
+        return ops.int8_linear_infer(h, q, s, out_dtype=dt)
+
+    h1 = None
+    if has_1bit:
+        def pair(name1, name8):
+            w1 = params[name1]
+            q8, s8 = _int8_kernel_view(params[name8])
+            return ops.decoupled_first_gemm(
+                xf, w1["packed"], q8, w1["scale"], s8, one, one, out_dtype=dt
+            )
+
+        up1, up8 = pair("w1_up", "w8_up")
+        if glu:
+            g1, g8 = pair("w1_gate", "w8_gate")
+            h1, h8 = act_fn(g1) * up1, act_fn(g8) * up8
+        else:
+            h1, h8 = act_fn(up1), act_fn(up8)
+    else:
+        up8 = int8_lin("w8_up", xf)
+        h8 = act_fn(int8_lin("w8_gate", xf)) * up8 if glu else act_fn(up8)
+
+    y = params["alpha"].astype(dt) * int8_lin("w8_down", h8)
+    if h1 is not None:
+        h1 = rmsnorm(params["subln"], h1)
+        y = y + params["beta"].astype(dt) * bit_lin("w1_down", h1)
+    return y
+
+
 def _branch8_apply(params, x: Array, glu: bool, act_fn, qcfg: QuantConfig) -> Array:
     """Batched-over-experts 8-bit FFN: x (N, C, D) -> (N, C, D)."""
     wq = lambda w: (
@@ -153,7 +245,27 @@ def _branch8_apply(params, x: Array, glu: bool, act_fn, qcfg: QuantConfig) -> Ar
 
 
 def _branch1_apply(params, x: Array, glu: bool, act_fn, qcfg: QuantConfig) -> Array:
-    """1-bit FFN branch: x (T, D) -> (T, D)."""
+    """1-bit FFN branch: x (T, D) -> (T, D).  Packed serving weights run the
+    W1A8 kernel tier (this arm covers routed-8-bit configs whose 8-bit
+    branch can't take the fused path; the common case goes through
+    :func:`_ffn_packed_apply`)."""
+    if all(
+        is_packed_1bit(params[n])
+        for n in (("w1_gate", "w1_up", "w1_down") if glu
+                  else ("w1_up", "w1_down"))
+    ):
+        from repro.kernels import ops
+
+        def lin(name, h):
+            w = params[name]
+            return ops.bit_linear_infer(
+                h, w["packed"], w["scale"], out_dtype=x.dtype
+            )
+
+        up = lin("w1_up", x)
+        h = act_fn(lin("w1_gate", x)) * up if glu else act_fn(up)
+        h = rmsnorm(params["subln"], h)
+        return lin("w1_down", h)
     if qcfg.qgather and qcfg.mode in ("bitnet", "pquant"):
         from repro.distributed.qgather import binarize_gather
 
@@ -205,6 +317,9 @@ def decoupled_ffn(
     xf = x.reshape(-1, d)
     t = xf.shape[0]
     aux = jnp.zeros((), jnp.float32)
+
+    if _serving_ffn_layout(params, glu):
+        return _ffn_packed_apply(params, xf, glu, act_fn).reshape(*lead, d), aux
 
     y = jnp.zeros_like(xf)
     has_1bit = "w1_up" in params
@@ -293,9 +408,47 @@ def decoupled_proj(
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
     aux = jnp.zeros((), jnp.float32)
-    xq = maybe_quant_acts(xf, qcfg)
-    w1q = fake_quant_linear_weights(params["w1"], qcfg).astype(x.dtype)
-    y = params["beta"].astype(x.dtype) * (xq @ w1q)
+
+    if (
+        is_packed_1bit(params["w1"])
+        and is_stored_int8(params["w8_a"])
+        and is_stored_int8(params["w8_b"])
+        and params["w8_a"]["q"].shape[0] == 1
+    ):
+        # serving layout: fused dual-branch first GEMM (1-bit full projection
+        # + 8-bit bottleneck in one activation read), then the INT8 second
+        # bottleneck matmul — all on stored integers.
+        from repro.kernels import ops
+
+        dt = x.dtype
+        one = jnp.ones((), jnp.float32)
+        qa, sa = _int8_kernel_view(params["w8_a"])
+        y1, h8 = ops.decoupled_first_gemm(
+            xf, params["w1"]["packed"], qa, params["w1"]["scale"], sa,
+            one, one, out_dtype=dt,
+        )
+        qb, sb = _int8_kernel_view(params["w8_b"])
+        y8 = ops.int8_linear_infer(h8, qb, sb, out_dtype=dt)
+        y = (
+            params["beta"].astype(dt) * y1
+            + params["alpha"].astype(dt) * y8
+        )
+        return y.reshape(*lead, -1), aux
+
+    if is_packed_1bit(params["w1"]):
+        # routed (N > 1) 8-bit branch below keeps the float path, but the
+        # dominant 1-bit trunk still computes on packed integers
+        from repro.kernels import ops
+
+        y1 = ops.bit_linear_infer(
+            xf, params["w1"]["packed"], params["w1"]["scale"],
+            out_dtype=x.dtype,
+        )
+    else:
+        xq = maybe_quant_acts(xf, qcfg)
+        w1q = fake_quant_linear_weights(params["w1"], qcfg).astype(x.dtype)
+        y1 = xq @ w1q
+    y = params["beta"].astype(x.dtype) * y1
 
     w8q = lambda w: (
         w if qcfg.mode == "none" else quantize_weights_int8_stacked(w)[0]

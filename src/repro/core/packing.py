@@ -22,25 +22,26 @@ Array = jax.Array
 
 
 def pack_signs(signs: Array) -> Array:
-    """Pack +-1 (or bool) signs along axis 0 (the K axis) into uint8.
+    """Pack +-1 (or bool) signs along the K (second-to-last) axis into uint8.
 
-    signs: (K, N) with values in {-1, +1}.  K must be a multiple of 8.
-    Returns (K//8, N) uint8.
+    signs: (..., K, N) with values in {-1, +1}; leading axes (layer stacks,
+    expert stacks) pack per slice.  K must be a multiple of 8.
+    Returns (..., K//8, N) uint8.
     """
-    k, n = signs.shape
+    *lead, k, n = signs.shape
     assert k % 8 == 0, f"K={k} must be a multiple of 8"
-    bits = (signs > 0).astype(jnp.uint8).reshape(k // 8, 8, n)
-    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))[None, :, None]
-    return jnp.sum(bits * weights, axis=1, dtype=jnp.uint8)
+    bits = (signs > 0).astype(jnp.uint8).reshape(*lead, k // 8, 8, n)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))[:, None]
+    return jnp.sum(bits * weights, axis=-2, dtype=jnp.uint8)
 
 
 def unpack_signs(packed: Array, dtype=jnp.int8) -> Array:
-    """Inverse of :func:`pack_signs`: (K//8, N) uint8 -> (K, N) +-1."""
-    kb, n = packed.shape
-    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
-    bits = (packed[:, None, :] >> shifts) & jnp.uint8(1)
+    """Inverse of :func:`pack_signs`: (..., K//8, N) uint8 -> (..., K, N) +-1."""
+    *lead, kb, n = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)[:, None]
+    bits = (packed[..., :, None, :] >> shifts) & jnp.uint8(1)
     signs = bits.astype(jnp.int8) * 2 - 1
-    return signs.reshape(kb * 8, n).astype(dtype)
+    return signs.reshape(*lead, kb * 8, n).astype(dtype)
 
 
 @dataclasses.dataclass

@@ -187,16 +187,47 @@ def quantize_weights_int8(w: Array, axis: Optional[int] = None) -> tuple[Array, 
 # ---------------------------------------------------------------------------
 
 
+def act_scale_int8(x: Array) -> Array:
+    """Per-token AbsMax INT8 scale: gamma = 127 / (max|x| + eps) along the
+    feature (last) axis, computed in float32.
+
+    The SINGLE source of truth for activation quantization scales: the
+    fake-quant trainer path (:func:`quantize_activations_int8`), the
+    runtime integer path (:func:`quantize_act_int8`, re-exported by
+    ``repro.kernels.ops``) and the fused kernel prologues
+    (``w1a8_gemv._quant_prologue``, ``rmsnorm_quant``) all compute exactly
+    this — float32 amax, ``INT8_QMAX / (amax + EPS)`` — so packed-vs-
+    fake-quant parity cannot drift in bf16 (bf16 amax used to round
+    differently from the kernels' f32 amax).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return INT8_QMAX / (amax + EPS)
+
+
 def quantize_activations_int8(x: Array) -> tuple[Array, Array]:
     """Per-token AbsMax INT8 activation fake-quant (paper Eq. 7-9).
 
-    gamma = 127 / max|x| along the feature (last) axis, per token.
-    Returns ``(x_q, gamma)`` with ``x_q = RoundClip(x * gamma) / gamma``.
+    gamma = 127 / max|x| along the feature (last) axis, per token
+    (:func:`act_scale_int8`).  Returns ``(x_q, gamma)`` with
+    ``x_q = RoundClip(x * gamma) / gamma`` in the input dtype.
     """
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    gamma = INT8_QMAX / (amax + EPS)
-    q = jnp.clip(ste_round(x * gamma), -INT8_QMAX, INT8_QMAX)
-    return q / gamma, gamma
+    gamma = act_scale_int8(x)
+    q = jnp.clip(ste_round(x.astype(jnp.float32) * gamma), -INT8_QMAX, INT8_QMAX)
+    return (q / gamma).astype(x.dtype), gamma
+
+
+def quantize_act_int8(x: Array) -> tuple[Array, Array]:
+    """Per-token AbsMax INT8 (runtime, true-integer path).
+
+    Same grid as :func:`quantize_activations_int8` (one
+    :func:`act_scale_int8` source of truth), but returns the int8 tensor
+    and a flat per-row gamma for the kernel epilogues.
+    """
+    gamma = act_scale_int8(x)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) * gamma), -INT8_QMAX, INT8_QMAX
+    )
+    return q.astype(jnp.int8), gamma[..., 0]
 
 
 # ---------------------------------------------------------------------------
@@ -253,15 +284,33 @@ class QuantConfig:
 
 def _dequant_stored(w: dict) -> Array:
     """Dequantize a serving-format weight: {"q": int8, "scale": f32} or
-    {"packed": uint8 (K//8, N), "scale": f32} (see train/quantized_serving).
+    {"packed": uint8 (..., K//8, N), "scale": f32} (see
+    train/quantized_serving; leading axes are layer/expert stacks).
     The integer tensor is what lives in HBM — this is the paper's deployment
-    layout (§A) expressed in the compiled artifact."""
+    layout (§A) expressed in the compiled artifact.
+
+    This float fallback is only for paths without a packed kernel (training
+    utilities, routed 8-bit experts); the model forward dispatches packed
+    layouts to ``repro.kernels.ops`` (``bit_linear_infer`` /
+    ``decoupled_first_gemm`` / ``int8_linear_infer``) instead."""
     if "packed" in w:
         from repro.core.packing import unpack_signs
 
         signs = unpack_signs(w["packed"], jnp.int8)
         return signs.astype(w["scale"].dtype) * w["scale"]
     return w["q"].astype(w["scale"].dtype) * w["scale"]
+
+
+def is_packed_1bit(w) -> bool:
+    """True for the bit-packed 1-bit serving layout {"packed", "scale"}
+    consumable by ``ops.bit_linear_infer`` / ``ops.decoupled_first_gemm``."""
+    return isinstance(w, dict) and "packed" in w
+
+
+def is_stored_int8(w) -> bool:
+    """True for the INT8 serving layout {"q", "scale"} (8-bit branch, or the
+    1-bit sign fallback when K isn't byte-aligned)."""
+    return isinstance(w, dict) and "q" in w
 
 
 def fake_quant_linear_weights(w, cfg: QuantConfig) -> Array:

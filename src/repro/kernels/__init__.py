@@ -19,4 +19,12 @@ Decode-tier tile sizes are answered per (M, K, N) signature by
 ``ops.decode_tiles`` (divisor heuristic) and can be autotuned on the
 current backend with ``ops.sweep_decode_tiles`` — the swept winner is
 cached and picked up by later calls with the same signature.
+
+Model-stack call sites (since the packed-forward wiring): ``bitlinear``
+(attention / MLA projections), ``core.decoupled`` (FFN trunk, fused
+dual-branch first GEMMs, 8-bit branch, decoupled projections) and
+``models.moe`` (per-expert slices) all dispatch here whenever their
+weights are in the ``quantize_params_for_serving(packed=True)`` layout —
+``DecodeEngine`` / ``ContinuousBatchingEngine`` decode steps (M = batch
+<= DECODE_M_MAX) land on the GEMV row.
 """

@@ -30,6 +30,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantization import quantize_act_int8  # noqa: F401  (re-export:
+# the single act-quant source of truth lives in core.quantization)
 from repro.kernels import ref, tile_cache
 from repro.kernels.decoupled_matmul import decoupled_matmul
 from repro.kernels.int8_matmul import int8_matmul
@@ -85,14 +87,6 @@ def _pad_gamma(gamma: Array, mult: int) -> Array:
     if pad:
         gamma = jnp.pad(gamma, ((0, pad),), constant_values=1.0)
     return gamma
-
-
-def quantize_act_int8(x: Array):
-    """Per-token AbsMax INT8 (runtime, true-integer path)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    gamma = 127.0 / (amax + 1e-5)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) * gamma[:, None]), -127, 127)
-    return q.astype(jnp.int8), gamma
 
 
 # ---------------------------------------------------------------------------
@@ -212,15 +206,30 @@ def sweep_decode_tiles(
 # ---------------------------------------------------------------------------
 
 
+def _prefill_tiles(k: int, n: int, r: int | None = None):
+    """(bk, bn): the widest candidate tiles that divide (K, N) — the
+    prefill-tier kernels assert even tiling, and model-stack shapes (e.g.
+    Mamba's d_inner = 384) aren't always multiples of the 256 defaults.
+    Ragged dims fall back to the whole dim (a single tile).  With ``r``
+    set, bn also fits the 8-bit branch (bn >= r)."""
+    bk = _largest_divisor(k, _BK_CANDIDATES)
+    bn = _largest_divisor(n, _BN_CANDIDATES)
+    if r is not None and bn < r:
+        wide = [c for c in _BN_CANDIDATES if c >= r and n % c == 0]
+        bn = min(wide) if wide else n
+    return bk, bn
+
+
 def _bit_linear_prefill(xf: Array, w_packed: Array, lam: Array, out_dtype):
     """Prefill-tiled path: XLA act-quant pass + M-tiled w1a8_matmul."""
     xq, gamma = quantize_act_int8(xf)
     bm = 8 if xq.shape[0] <= 128 else 128
     xq, m = _pad_rows(xq, bm)
     gamma_p = _pad_gamma(gamma, bm)
+    bk, bn = _prefill_tiles(xf.shape[1], w_packed.shape[1])
     y = w1a8_matmul(
         xq, w_packed, gamma_p, lam,
-        bm=bm, out_dtype=out_dtype, interpret=not on_tpu(),
+        bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
     )
     return y[:m]
 
@@ -264,8 +273,9 @@ def int8_linear_infer(
     bm = 8 if xq.shape[0] <= 128 else 128
     xq, m = _pad_rows(xq, bm)
     gamma_p = _pad_gamma(gamma, bm)
+    bk, bn = _prefill_tiles(xf.shape[1], w_q.shape[1])
     y = int8_matmul(
-        xq, w_q, gamma_p, wscale, bm=bm, out_dtype=out_dtype,
+        xq, w_q, gamma_p, wscale, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
         interpret=not on_tpu(),
     )
     return y[:m].reshape(*lead, -1)
@@ -289,10 +299,10 @@ def _decoupled_prefill(
     xq, m = _pad_rows(xq, bm)
     gamma_p = _pad_gamma(gamma, bm)
     r = w8_q.shape[1]
-    bn = max(256, r)
+    bk, bn = _prefill_tiles(xf.shape[1], w1_packed.shape[1], r=r)
     y1, y8 = decoupled_matmul(
         xq, w1_packed, w8_q, gamma_p, lam, w8scale, alpha, beta,
-        bm=bm, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+        bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
     )
     return y1[:m], y8[:m]
 

@@ -45,7 +45,12 @@ DEFAULT_BK, DEFAULT_BN = 512, 512
 def _quant_prologue(x_ref, xq_ref, gamma_ref):
     """Per-token AbsMax INT8 quantize of the full (bm, K) activation block
     into VMEM scratch.  gamma = 127 / (amax + 1e-5) is never zero, so pad
-    rows (all-zero activations) stay finite through the epilogue."""
+    rows (all-zero activations) stay finite through the epilogue.
+
+    This is the in-kernel mirror of ``core.quantization.act_scale_int8``
+    (f32 amax, 127 / (amax + 1e-5)) — the single act-quant formula shared
+    with the fake-quant path; keep them in lockstep or packed-vs-fake-quant
+    parity drifts."""
     xf = x_ref[...].astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1)
     gamma = 127.0 / (amax + 1e-5)

@@ -43,8 +43,14 @@ def loss_fn(params, batch, cfg: ModelConfig):
     return _mod(cfg).lm_loss(params, batch, cfg)
 
 
-def prefill(params, batch, cfg: ModelConfig, cache_len: int):
-    return _mod(cfg).prefill(params, batch, cfg, cache_len)
+def prefill(params, batch, cfg: ModelConfig, cache_len: int, last_pos=None):
+    """``last_pos`` (optional traced scalar) selects the logits position for
+    bucket-padded prompts (decoder families only; see transformer.prefill)."""
+    if last_pos is None:
+        return _mod(cfg).prefill(params, batch, cfg, cache_len)
+    if cfg.family == "encdec":
+        raise NotImplementedError("bucketed prefill is decoder-family only")
+    return _mod(cfg).prefill(params, batch, cfg, cache_len, last_pos)
 
 
 def decode_step(params, tokens, caches, pos, cfg: ModelConfig, active=None):

@@ -1,6 +1,9 @@
 """Attention variants: GQA/MQA with optional sliding window, DeepSeek-V2 MLA,
 and cross-attention (Whisper).  All projections are BitLinear (pure 1-bit,
-paper §3.1) in quantized modes.
+paper §3.1) in quantized modes; on packed serving weights
+(``quantize_params_for_serving(packed=True)``) every projection runs the
+true-integer W1A8 kernel tier — decode-shaped calls hit the fused-act-quant
+``w1a8_gemv`` (see ``core.bitlinear`` / ``kernels.ops``).
 
 Cache-adapter protocol (decode): each layer owns a dict of cache arrays;
 ``*_prefill`` fills it from a full sequence and ``*_decode`` extends it by

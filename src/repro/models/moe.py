@@ -17,6 +17,7 @@ from repro.core.decoupled import ACTIVATIONS
 from repro.core.quantization import (
     QuantConfig,
     fake_quant_stacked,
+    is_packed_1bit,
     maybe_quant_acts,
 )
 from repro.core.routing import RouterConfig
@@ -74,8 +75,43 @@ def _expert_wq(qcfg: QuantConfig, dtype):
     return lambda w, axes=None: fake_quant_stacked(w, qcfg).astype(dtype)
 
 
+def _experts_packed(params, glu: bool) -> bool:
+    """True when every expert weight is the bit-packed serving layout
+    {"packed": (E, D//8, F) uint8, "scale": (E, 1, 1)} (per-slice packing,
+    see train/quantized_serving)."""
+    names = ("we_gate", "we_up", "we_down") if glu else ("we_up", "we_down")
+    return all(is_packed_1bit(params[n]) for n in names)
+
+
+def _experts_apply_packed(params, xe: Array, cfg: ModelConfig) -> Array:
+    """Packed-serving expert FFN: one W1A8 kernel call per expert slice
+    (E is static, so this unrolls; each expert keeps its own AbsMean scale).
+    xe: (..., E, C, D) with the expert axis second-to-third-from-last."""
+    from repro.kernels import ops
+
+    act = ACTIVATIONS[cfg.activation]
+    e_ax = xe.ndim - 3
+    n_e = xe.shape[e_ax]
+
+    def lin(name, h, e):
+        w = params[name]
+        return ops.bit_linear_infer(
+            h, w["packed"][e], w["scale"][e], out_dtype=xe.dtype
+        )
+
+    outs = []
+    for e in range(n_e):
+        x_e = jnp.take(xe, e, axis=e_ax)
+        up = lin("we_up", x_e, e)
+        h = act(lin("we_gate", x_e, e)) * up if cfg.glu else act(up)
+        outs.append(lin("we_down", h, e))
+    return jnp.stack(outs, axis=e_ax)
+
+
 def _experts_apply(params, xe: Array, cfg: ModelConfig, qcfg: QuantConfig) -> Array:
     """Batched expert FFN: xe (E, C, D) -> (E, C, D), per-expert quantized."""
+    if _experts_packed(params, cfg.glu):
+        return _experts_apply_packed(params, xe, cfg)
     act = ACTIVATIONS[cfg.activation]
     wq = _expert_wq(qcfg, xe.dtype)
     xq = maybe_quant_acts(xe, qcfg)
@@ -93,6 +129,9 @@ def _experts_apply(params, xe: Array, cfg: ModelConfig, qcfg: QuantConfig) -> Ar
 
 def _experts_apply_grouped(params, xe: Array, cfg: ModelConfig, qcfg) -> Array:
     """Batched expert FFN for einsum dispatch: (G, E, C, D) -> (G, E, C, D)."""
+    if _experts_packed(params, cfg.glu):
+        # bit_linear_infer flattens the (G, C) token axes per expert slice
+        return _experts_apply_packed(params, xe, cfg)
     act = ACTIVATIONS[cfg.activation]
     wq = _expert_wq(qcfg, xe.dtype)
     xq = maybe_quant_acts(xe, qcfg)

@@ -657,9 +657,18 @@ def decode_step(
     return logits, new_caches
 
 
-def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int,
+            last_pos: Optional[Array] = None):
     """Run the full prompt once, producing last-position logits and filled
     KV caches of length ``cache_len`` (>= prompt length).
+
+    ``last_pos`` (traced scalar) reads the logits at position
+    ``last_pos - 1`` instead of the final row — the hook for bucketed
+    admission prefill (serve/scheduler): the prompt is right-padded to a
+    shared bucket length so one trace serves many prompt lengths, and
+    causal masking keeps every position < last_pos bit-identical to an
+    exact-length prefill (pad positions only write cache slots that decode
+    masks until it overwrites them).
 
     Returns (logits_last (B,V), caches).  Cache structure matches
     :func:`init_cache` / :func:`decode_step`.
@@ -669,7 +678,13 @@ def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
     positions = jnp.arange(x.shape[1])
     tabs = _rope_tabs(cfg, positions)
     x, _, caches = _run_segments(params, x, cfg, tabs, cache_len=cache_len)
-    x = rmsnorm(params["final_norm"], x[:, -1:])
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32) - 1, 1, axis=1
+        )
+    x = rmsnorm(params["final_norm"], xl)
     head = params.get("lm_head", params["embed"])
     logits = unembed(head, x, cfg)
     return logits[:, 0], caches

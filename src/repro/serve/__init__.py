@@ -23,6 +23,14 @@ pool per global-attention layer plus per-slot block tables; sliding-window
 layers keep their dense ring caches, whose length *is* the window).  The
 model stack dispatches on the ``"table"`` key, so every engine tier runs
 either layout and produces identical tokens.
+
+All three tiers serve either weight layout: latent fake-quant params (float
+matmuls on the quantization grid) or the packed integer export from
+``repro.train.quantized_serving.quantize_params_for_serving(packed=True)``,
+where every backbone linear runs the Pallas W1A8 kernel tier and decode
+steps hit the fused-act-quant GEMV kernels (``repro.kernels``).  The packed
+engines are bit-for-bit self-consistent across tiers and stay within float
+rounding of the fake-quant oracle (``tests/test_packed_serving.py``).
 """
 
 from repro.serve.engine import (  # noqa: F401

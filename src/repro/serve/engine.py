@@ -138,6 +138,26 @@ def _make_prefill_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
     return prefill
 
 
+def _make_bucketed_prefill_fn(cfg: ModelConfig, cache_len: int,
+                              scfg: SamplerConfig):
+    """Prefill for bucket-padded prompts: ``batch["tokens"]`` is right-padded
+    to a shared bucket length and ``plen`` (traced) is the true prompt
+    length, so ONE trace serves every prompt length in the bucket.  Logits
+    come from position ``plen - 1`` and ``pos0 = plen``; the key-split
+    order matches :func:`_prefill_sample` exactly (split after prefill),
+    preserving the per-request determinism contract."""
+
+    def prefill(params, batch, plen, key):
+        logits, caches = api.prefill(
+            params, batch, cfg, cache_len, last_pos=plen
+        )
+        key, sub = jax.random.split(key)
+        tok0 = sample_token(sub, logits, scfg)
+        return tok0, caches, jnp.asarray(plen, jnp.int32), key
+
+    return prefill
+
+
 def _make_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
     """Streaming chunk: ``length`` decode steps plus per-sequence done
     tracking.  Returns (packed (B, length+1), carry) where the last packed
@@ -204,8 +224,12 @@ class DecodeEngine:
     def _chunk_fn(self, scfg: SamplerConfig, length: int):
         key = self._key(scfg)[1:] + (length,)
         if key not in self._chunk_fns:
+            # donate the cache tree: each chunk writes one token per layer
+            # into multi-MB KV buffers — without donation XLA copies the
+            # whole tree per chunk (the caller always rebinds from the
+            # return value, so the donated input is never reused)
             self._chunk_fns[key] = jax.jit(
-                _make_chunk_fn(self.cfg, scfg, length)
+                _make_chunk_fn(self.cfg, scfg, length), donate_argnums=(2,)
             )
         return self._chunk_fns[key]
 

@@ -7,10 +7,15 @@ whole batch to drain.  ``ContinuousBatchingEngine`` keeps the same compiled
 decode program (fixed ``num_slots``-wide batch, ``lax.scan`` chunks,
 on-device sampling) but gives every slot its own lifecycle:
 
-* **admission** — a queued request is prefilled (batch-1, its exact prompt
-  length: no caller-side padding games), its KV prefix installed into a
-  free slot (scattered into pool blocks under the paged layout), and its
-  per-slot state (position, PRNG key, budget) written device-side.
+* **admission** — a queued request is prefilled batch-1, its KV prefix
+  installed into a free slot (scattered into pool blocks under the paged
+  layout), and its per-slot state (position, PRNG key, budget) written
+  device-side.  Where parity allows (:func:`_bucketed_prefill_safe`) the
+  prompt is right-padded to a power-of-two bucket so one compiled trace
+  serves every length in the bucket; pad positions are causally invisible
+  and their cache slots stay masked until decode overwrites them, so each
+  request's stream is unchanged.  Ring-cache / recurrent / MoE configs
+  fall back to exact-length prefill (one retrace per distinct length).
 * **decode** — one compiled chunk advances all slots together; per-slot
   positions, EOS/stop-token hits and ``max_new_tokens`` budgets are
   tracked as on-device masks, and finished slots produce **no cache
@@ -49,6 +54,7 @@ from repro.serve import kv_pool
 from repro.serve.engine import (
     SamplerConfig,
     _hit_stop,
+    _make_bucketed_prefill_fn,
     _make_prefill_fn,
     sample_token,
 )
@@ -238,6 +244,33 @@ def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
     return chunk
 
 
+def _bucketed_prefill_safe(cfg: ModelConfig, max_len: int) -> bool:
+    """Whether admission prefill may right-pad prompts to a shared bucket
+    length without changing any request's stream.
+
+    Safe exactly when pad tokens cannot leak into real positions: causal
+    attention confines them to cache slots the decode mask gates until the
+    real stream overwrites them.  Unsafe cases fall back to exact-length
+    prefill (one retrace per distinct length, the pre-bucketing behavior):
+
+    * ring caches (``window < max_len``): prefill keeps the last W
+      positions of the *padded* sequence, evicting real tokens;
+    * ssm / rec mixers: the recurrent state integrates the pad suffix;
+    * MoE / routed 8-bit branches: Switch-style capacity couples tokens,
+      so the pad tokens change real tokens' routing;
+    * VLM image prefixes (position offsets are caller-managed).
+    """
+    if cfg.moe or cfg.quant.num_experts > 1 or cfg.n_image_tokens > 0:
+        return False
+    for seg in build_segments(cfg):
+        for spec in seg.blocks:
+            if spec.mixer not in ("attn", "mla"):
+                return False
+            if 0 < spec.window < max_len:
+                return False
+    return True
+
+
 def _admit_state(state, slot, tok0, key, pos0, budget):
     """Write one slot's device-side lifecycle state (ngen starts at 1: the
     prefill-sampled first token is emitted at admission)."""
@@ -334,16 +367,26 @@ class ContinuousBatchingEngine:
             "budget": jnp.zeros((b,), jnp.int32),
         }
 
+        # exact-length prefill retraces per prompt length; where parity
+        # allows it (_bucketed_prefill_safe), admission right-pads prompts
+        # to power-of-two buckets so one trace covers a whole bucket
         self._prefill = jax.jit(
             _make_prefill_fn(cfg, max_len, self.scfg)
-        )  # retraces per prompt length, one jit object
+        )
+        self._prefill_bucketed = (
+            jax.jit(_make_bucketed_prefill_fn(cfg, max_len, self.scfg))
+            if _bucketed_prefill_safe(cfg, max_len) else None
+        )
+        # the cache tree and slot state are donated: the chunk rewrites
+        # them in place instead of copying the full KV pool every chunk
+        # (the caller rebinds both from the return value)
         self._chunk_fn = jax.jit(
-            _make_cb_chunk_fn(cfg, self.scfg, chunk)
+            _make_cb_chunk_fn(cfg, self.scfg, chunk), donate_argnums=(1, 2)
         )
         self._install_fns: dict[int, Callable] = {}
-        self._set_tables = jax.jit(_make_set_tables_fn(cfg))
-        self._admit_jit = jax.jit(_admit_state)
-        self._deactivate_jit = jax.jit(_deactivate)
+        self._set_tables = jax.jit(_make_set_tables_fn(cfg), donate_argnums=(0,))
+        self._admit_jit = jax.jit(_admit_state, donate_argnums=(0,))
+        self._deactivate_jit = jax.jit(_deactivate, donate_argnums=(0,))
 
     # -- construction -------------------------------------------------------
 
@@ -506,15 +549,37 @@ class ContinuousBatchingEngine:
                 finished.append(done)
         return finished
 
-    def _admit(
-        self, req: Request, slot: int, blocks: list[int]
-    ) -> Optional[FinishedRequest]:
-        tok0_d, small, pos0, key = self._prefill(
+    def _bucket_len(self, s: int) -> int:
+        """Smallest power of two >= s, capped at the slot capacity."""
+        b = 1
+        while b < s:
+            b <<= 1
+        return min(b, self.max_len)
+
+    def _admission_prefill(self, req: Request):
+        """Batch-1 prefill for admission.  Bucketed where parity-safe (one
+        trace per power-of-two length bucket); exact-length otherwise."""
+        if self._prefill_bucketed is not None:
+            s = len(req.prompt)
+            padded = np.zeros((self._bucket_len(s),), np.int32)
+            padded[:s] = req.prompt
+            return self._prefill_bucketed(
+                self.params,
+                {"tokens": jnp.asarray(padded[None])},
+                jnp.asarray(s, jnp.int32),
+                jax.random.PRNGKey(req.seed),
+            )
+        return self._prefill(
             self.params,
             {"tokens": jnp.asarray(req.prompt[None])},
             jnp.asarray(0, jnp.int32),
             jax.random.PRNGKey(req.seed),
         )
+
+    def _admit(
+        self, req: Request, slot: int, blocks: list[int]
+    ) -> Optional[FinishedRequest]:
+        tok0_d, small, pos0, key = self._admission_prefill(req)
         tok0 = int(self._fetch(tok0_d)[0])  # one scalar per admission
         now = self.now()
         if tok0 in self._stop_set or req.max_new_tokens == 1:
@@ -529,7 +594,7 @@ class ContinuousBatchingEngine:
         nb = len(blocks)
         if nb not in self._install_fns:
             self._install_fns[nb] = jax.jit(
-                _make_install_fn(self.cfg, nb)
+                _make_install_fn(self.cfg, nb), donate_argnums=(0,)
             )
         self._caches = self._install_fns[nb](
             self._caches, small, jnp.asarray(slot), table_row

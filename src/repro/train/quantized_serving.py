@@ -18,6 +18,7 @@ Weight classification is by parameter path name:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -43,14 +44,28 @@ def _path_keys(path) -> list[str]:
     return [str(getattr(e, "key", getattr(e, "idx", ""))) for e in path]
 
 
-def _binarize_export(w: Array, packed: bool):
-    """Latent -> {"q" | "packed", "scale"}; per-slice for stacked experts."""
+def _binarize_export(w: Array, packed: bool, name: str = ""):
+    """Latent -> {"q" | "packed", "scale"}; per-slice for stacked (layer- or
+    expert-stacked) weights: ``pack_signs`` packs along the K (second-to-
+    last) axis of every slice, so scanned layer stacks and MoE expert stacks
+    bit-pack exactly like plain 2-D linears.  A K that isn't byte-aligned
+    cannot pack (the kernels stream whole uint8 K-bytes); that case falls
+    back to unpacked INT8 signs with an explicit warning instead of
+    silently losing the 16x weight-traffic story."""
     red = tuple(range(max(0, w.ndim - 2), w.ndim))
     mu = jnp.mean(w, axis=red, keepdims=True)
     lam = (jnp.mean(jnp.abs(w), axis=red, keepdims=True) + 1e-5).astype(jnp.float32)
     signs = jnp.where(w - mu >= 0, jnp.int8(1), jnp.int8(-1))
-    if packed and w.ndim == 2 and w.shape[0] % 8 == 0:
-        return {"packed": pack_signs(signs), "scale": lam}
+    if packed:
+        if w.shape[-2] % 8 == 0:
+            return {"packed": pack_signs(signs), "scale": lam}
+        warnings.warn(
+            f"packed export of {name or 'a 1-bit weight'} "
+            f"{tuple(w.shape)}: K={w.shape[-2]} is not a multiple of 8; "
+            "storing unpacked INT8 signs (8x larger, no packed-kernel "
+            "dispatch for this layer)",
+            stacklevel=2,
+        )
     return {"q": signs, "scale": lam}
 
 
@@ -67,8 +82,10 @@ def quantize_params_for_serving(
 ):
     """Transform (params, axes) into the integer serving layout.
 
-    packed=True additionally bit-packs 2-D 1-bit weights 8/byte (stacked
-    expert weights stay INT8 — packing is per-2D-matrix).
+    packed=True additionally bit-packs 1-bit weights 8/byte along the K
+    axis — per slice for layer-scanned and expert-stacked weights, so the
+    whole 1-bit backbone is kernel-consumable.  Weights whose K isn't a
+    multiple of 8 fall back to unpacked INT8 signs with a warning.
     Returns (qparams, qaxes): axes mirror the new structure (the integer
     tensor keeps the latent's logical axes; scales are replicated).
     """
@@ -89,7 +106,7 @@ def quantize_params_for_serving(
         is_int1 = name in INT1_DIRECT or (name == "w" and parent in INT1_WRAPPED)
         is_int8 = name in INT8_DIRECT
         if is_int1 and leaf.ndim >= 2:
-            q = _binarize_export(leaf, packed)
+            q = _binarize_export(leaf, packed, name="/".join(keys))
             if "packed" in q:
                 # packed dim0 = K//8: same logical axis, 1/8 length
                 qa = {"packed": tuple(leaf_axes), "scale": ((None,) * leaf.ndim)}

@@ -2,9 +2,12 @@
 decode-shape dry-runs lower.
 
 Decode is the paper's headline efficiency case (W1A8 GEMV is bandwidth
-bound; 1-bit weights cut weight traffic 16x) — the packed-weight Pallas
-path (repro.kernels.ops) is used on TPU; CPU examples run the fake-quant
-path for identical numerics.
+bound; 1-bit weights cut weight traffic 16x) — exporting the model with
+``quantized_serving.quantize_params_for_serving(packed=True)`` makes every
+backbone linear execute the packed-weight Pallas tier (repro.kernels.ops:
+``w1a8_gemv`` / ``decoupled_gemv`` on decode shapes, compiled on TPU,
+interpret mode on CPU); latent fake-quant weights keep the float path with
+identical quantization grids.
 
 The generation loop itself lives in :mod:`repro.serve.engine`
 (``DecodeEngine``): prefill + ``lax.scan`` decode + on-device sampling

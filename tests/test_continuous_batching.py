@@ -269,3 +269,69 @@ def test_auto_uids_never_recycle(params):
     b = eng.submit(_prompt(2, 3))  # queue drained: counter must not reset
     eng.run()
     assert a != b
+
+
+def test_chunk_fn_donates_cache_and_state_buffers(params):
+    """The compiled decode chunk aliases its cache-tree and slot-state
+    inputs to outputs (donate_argnums): without the aliasing XLA copies
+    the full KV pool every chunk.  Asserted on the lowering so the
+    invariant holds on backends where we can't watch allocations."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+        layout="paged", block_size=8, chunk=2,
+    )
+    txt = eng._chunk_fn.lower(
+        eng.params, eng._caches, eng._state
+    ).as_text()
+    n_alias = txt.count("tf.aliasing_output")
+    n_cache_leaves = len(jax.tree.leaves(eng._caches))
+    n_state_leaves = len(jax.tree.leaves(eng._state))
+    # every cache and state leaf is donated; params never are
+    assert n_alias == n_cache_leaves + n_state_leaves, txt[:500]
+
+
+def test_engine_stream_chunk_donates_caches(params, reference):
+    """DecodeEngine's streaming chunk donates the cache tree too."""
+    scfg = SamplerConfig(temperature=0.0, max_new_tokens=4)
+    prompts = jnp.asarray(_prompt(1, 4)[None])
+    tok, caches, pos, key = reference._prefill_fn(scfg)(
+        reference.params, {"tokens": prompts},
+        jnp.asarray(0, jnp.int32), jax.random.PRNGKey(0),
+    )
+    done = jnp.zeros(tok.shape, bool)
+    txt = reference._chunk_fn(scfg, 2).lower(
+        reference.params, tok, caches, pos, key, done
+    ).as_text()
+    assert txt.count("tf.aliasing_output") == len(jax.tree.leaves(caches))
+
+
+def test_bucketed_admission_reuses_prefill_traces(params, want):
+    """Ragged prompt lengths share power-of-two padded prefill traces
+    (lengths 5, 3, 7, 4 -> buckets 8, 4, 8, 4: two traces, not four) with
+    unchanged per-request streams — admission no longer retraces per
+    distinct prompt length."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+        layout="paged", block_size=8, chunk=4,
+    )
+    assert eng._prefill_bucketed is not None  # CFG is bucket-safe
+    for uid, n in PROMPTS.items():
+        eng.submit(_prompt(uid + 10, n), max_new_tokens=6, seed=uid, uid=uid)
+    finished = eng.run()
+    assert eng._prefill_bucketed._cache_size() == 2
+    for f in finished:
+        np.testing.assert_array_equal(f.tokens, want[f.uid])
+
+
+def test_bucketing_disabled_where_parity_unsafe():
+    """Ring caches (sliding-window layers) would fold pad tokens into the
+    window; those configs keep the exact-length prefill path."""
+    from repro.serve.scheduler import _bucketed_prefill_safe
+
+    assert _bucketed_prefill_safe(CFG, MAX_LEN)
+    assert not _bucketed_prefill_safe(SWA_CFG, 24)
+    moe = ModelConfig(name="m", family="decoder", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=48, vocab_size=64,
+                      quant=QC, moe=True, n_routed_experts=2, moe_top_k=1,
+                      d_ff_expert=16, first_k_dense=1)
+    assert not _bucketed_prefill_safe(moe, MAX_LEN)

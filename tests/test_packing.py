@@ -1,5 +1,10 @@
 """Bit-packing roundtrip + export invariants."""
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package"
+)
 import hypothesis
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st

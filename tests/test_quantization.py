@@ -1,12 +1,16 @@
 """Unit + property tests for the quantizers (paper Eq. 3-9)."""
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package"
+)
 import hypothesis
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.quantization import (
     INT8_QMAX,

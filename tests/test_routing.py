@@ -1,5 +1,10 @@
 """Sort-based top-k dispatch properties."""
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package"
+)
 import hypothesis
 import hypothesis.strategies as st
 import jax

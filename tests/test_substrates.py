@@ -3,12 +3,16 @@
 import os
 import tempfile
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package"
+)
 import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import (
