@@ -1,5 +1,5 @@
-"""Serving-tier benchmark: lockstep vs continuous batching under a
-Poisson arrival trace.
+"""Serving-tier benchmark: lockstep vs continuous batching (with and
+without chunked prefill) under a Poisson arrival trace.
 
 Rows (``name,us_per_call,derived`` — us_per_call is p50 request latency):
   serving/lockstep      fixed batches on DecodeEngine: a batch forms in
@@ -8,18 +8,29 @@ Rows (``name,us_per_call,derived`` — us_per_call is p50 request latency):
                         to the batch width — the "padding games" the
                         continuous engine removes)
   serving/continuous    ContinuousBatchingEngine: per-request admission at
-                        chunk boundaries over the paged KV pool
-  serving/continuous_packed  same engine on quantize_params_for_serving
-                        (packed=True) weights — decode chunks execute the
-                        W1A8 GEMV kernel tier (interpret mode on CPU: a
-                        wiring check there, a bandwidth story on TPU)
+                        chunk boundaries over the paged KV pool, one-shot
+                        admission prefill
+  serving/continuous_chunked  same engine with token-budget chunked
+                        prefill (``prefill_chunk``): an admitting prompt
+                        streams in as bounded forward_chunk slices, so a
+                        long prompt no longer stalls every live decode
+                        stream — the head-of-line latency this tier exists
+                        to remove
+  serving/continuous_packed  continuous engine on
+                        quantize_params_for_serving(packed=True) weights —
+                        decode chunks execute the W1A8 GEMV kernel tier
+                        (interpret mode on CPU: a wiring check there, a
+                        bandwidth story on TPU)
   serving/pool          paged-pool accounting for the continuous run
 
-derived carries tokens/sec over the trace makespan (useful tokens only:
-each request's own budget) and the p95 latency, so one CSV row captures
-both the throughput and the tail-latency story.  ``--smoke`` shrinks the
-trace to a seconds-scale CI subset (compile-dominated: the numbers are a
-wiring check there, not a scheduling signal).
+Every serving row carries tok_s (useful tokens over the trace makespan),
+request-latency p50/p95, TTFT (time-to-first-token) p50/p95 and p95
+inter-token latency, so one CSV captures throughput, tail latency AND the
+decode-cadence story chunked prefill is about.  The trace always includes
+at least one long prompt — that is the request that freezes the
+no-chunking decode cadence.  ``--smoke`` shrinks the trace to a
+seconds-scale CI subset (compile-dominated: the numbers are a wiring
+check there, not a scheduling signal).
 """
 
 from __future__ import annotations
@@ -51,18 +62,31 @@ def make_trace(n: int, seed: int, mean_gap_s: float, prompt_lens, budgets):
     return trace
 
 
-def _percentiles(lat_s):
-    lat_ms = np.asarray(lat_s) * 1e3
-    return float(np.percentile(lat_ms, 50)), float(np.percentile(lat_ms, 95))
+def _pctl(xs_s, q):
+    return float(np.percentile(np.asarray(xs_s) * 1e3, q))
+
+
+def _latency_fields(lat, ttft, itl):
+    """Shared derived-column block: request latency, TTFT, inter-token."""
+    return (
+        f"p50_ms={_pctl(lat, 50):.1f};p95_ms={_pctl(lat, 95):.1f};"
+        f"ttft_p50_ms={_pctl(ttft, 50):.1f};ttft_p95_ms={_pctl(ttft, 95):.1f};"
+        f"itl_p95_ms={_pctl(itl, 95):.2f}"
+    )
 
 
 def _run_lockstep(server, trace, num_slots, scfg, t0, pad_to):
     """Arrival-order batches of num_slots; each batch waits for its last
     member, prompts are left-padded to ``pad_to`` (pass the full-trace
     width so warm-up and timed runs compile the same shape), and every
-    member burns the full compiled budget."""
+    member burns the full compiled budget.  TTFT is the whole-batch
+    completion (generate is one blocking call — no earlier tokens exist),
+    and ITL spreads the whole call span — prefill included, since the
+    fused program exposes no per-token timestamps — over the token
+    budget; the continuous tiers measure ITL from first_token_at, so the
+    cross-tier ITL comparison flatters lockstep less than it seems."""
     import jax.numpy as jnp
-    lat = []
+    lat, ttft, itl = [], [], []
     done_tokens = 0
     for i in range(0, len(trace), num_slots):
         batch = trace[i : i + num_slots]
@@ -74,12 +98,15 @@ def _run_lockstep(server, trace, num_slots, scfg, t0, pad_to):
         prompts = np.zeros((num_slots, pad_to), np.int32)
         for j, r in enumerate(batch):
             prompts[j, pad_to - len(r["prompt"]) :] = r["prompt"]
+        launch = time.perf_counter() - t0
         server.generate(jnp.asarray(prompts), scfg, seed=batch[0]["seed"])
         finish = time.perf_counter() - t0
         for r in trace[i : i + num_slots]:
             lat.append(finish - r["arrival"])
+            ttft.append(finish - r["arrival"])
+            itl.append((finish - launch) / max(1, r["budget"]))
             done_tokens += r["budget"]
-    return lat, done_tokens, time.perf_counter() - t0
+    return lat, ttft, itl, done_tokens, time.perf_counter() - t0
 
 
 def _run_continuous(engine, trace, t0):
@@ -90,8 +117,13 @@ def _run_continuous(engine, trace, t0):
         )
     fin = engine.run()
     lat = [f.finished_at - f.arrival for f in fin]
+    ttft = [f.first_token_at - f.arrival for f in fin]
+    itl = [
+        (f.finished_at - f.first_token_at) / max(1, len(f.tokens) - 1)
+        for f in fin
+    ]
     done_tokens = sum(len(f.tokens) for f in fin)
-    return lat, done_tokens, time.perf_counter() - t0
+    return lat, ttft, itl, done_tokens, time.perf_counter() - t0
 
 
 def run(smoke: bool = False, num_slots: int | None = None,
@@ -104,9 +136,12 @@ def run(smoke: bool = False, num_slots: int | None = None,
 
     num_slots = num_slots or (2 if smoke else 4)
     n_requests = n_requests or (6 if smoke else 24)
-    prompt_lens = (4, 6) if smoke else (8, 12, 16)
+    # at least one LONG prompt per cycle: the request whose one-shot
+    # admission prefill stalls every live stream without chunking
+    prompt_lens = (4, 20, 6) if smoke else (8, 64, 12, 16)
     budgets = (4, 6) if smoke else (8, 16, 24)
     chunk = 4 if smoke else 8
+    prefill_chunk = 4 if smoke else 8
     cfg = tiny_config(d_model=64, d_ff=128, n_layers=2, vocab=256)
     max_len = max(prompt_lens) + max(budgets)
     block = 4
@@ -118,14 +153,16 @@ def run(smoke: bool = False, num_slots: int | None = None,
                        prompt_lens, budgets)
 
     box = {"t0": time.perf_counter()}
+    clock = lambda: time.perf_counter() - box["t0"]  # noqa: E731
+    # engines are built one at a time and dropped before the next so only
+    # ONE paged KV pool is ever device-resident
     eng = ContinuousBatchingEngine(
         params, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,
-        layout="paged", block_size=block, chunk=chunk,
-        clock=lambda: time.perf_counter() - box["t0"],
+        layout="paged", block_size=block, chunk=chunk, clock=clock,
     )
     server = DecodeEngine(params, cfg, max_len)
 
-    # warm both paths on an arrival-0 copy of the trace so the timed runs
+    # warm each path on an arrival-0 copy of the trace so the timed runs
     # measure scheduling, not XLA compiles (the engines are reused: their
     # compilation caches carry over)
     t0 = box["t0"]
@@ -137,21 +174,21 @@ def run(smoke: bool = False, num_slots: int | None = None,
 
     rows = []
     t0 = time.perf_counter()
-    lat, toks, span = _run_lockstep(server, trace, num_slots, scfg, t0,
-                                    pad_to)
-    p50, p95 = _percentiles(lat)
+    lat, ttft, itl, toks, span = _run_lockstep(
+        server, trace, num_slots, scfg, t0, pad_to
+    )
     rows.append(row(
-        "serving/lockstep", p50 * 1e3,
-        f"tok_s={toks / span:.1f};p50_ms={p50:.1f};p95_ms={p95:.1f}",
+        "serving/lockstep", _pctl(lat, 50) * 1e3,
+        f"tok_s={toks / span:.1f};" + _latency_fields(lat, ttft, itl),
     ))
 
     box["t0"] = t0 = time.perf_counter()
-    clat, ctoks, cspan = _run_continuous(eng, trace, t0)
-    cp50, cp95 = _percentiles(clat)
+    clat, cttft, citl, ctoks, cspan = _run_continuous(eng, trace, t0)
     rows.append(row(
-        "serving/continuous", cp50 * 1e3,
-        f"tok_s={ctoks / cspan:.1f};p50_ms={cp50:.1f};p95_ms={cp95:.1f};"
-        f"p50_speedup={p50 / max(cp50, 1e-9):.2f}x",
+        "serving/continuous", _pctl(clat, 50) * 1e3,
+        f"tok_s={ctoks / cspan:.1f};"
+        + _latency_fields(clat, cttft, citl)
+        + f";p50_speedup={_pctl(lat, 50) / max(_pctl(clat, 50), 1e-9):.2f}x",
     ))
     rows.append(row(
         "serving/pool", 0.0,
@@ -159,26 +196,41 @@ def run(smoke: bool = False, num_slots: int | None = None,
         f"preemptions={eng.preemptions};host_transfers={eng.host_transfers}",
     ))
 
+    del eng
+    ceng = ContinuousBatchingEngine(
+        params, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,
+        layout="paged", block_size=block, chunk=chunk,
+        prefill_chunk=prefill_chunk, clock=clock,
+    )
+    box["t0"] = time.perf_counter()
+    _run_continuous(ceng, [dict(r, arrival=0.0) for r in warm], box["t0"])
+    box["t0"] = t0 = time.perf_counter()
+    klat, kttft, kitl, ktoks, kspan = _run_continuous(ceng, trace, t0)
+    rows.append(row(
+        "serving/continuous_chunked", _pctl(klat, 50) * 1e3,
+        f"tok_s={ktoks / kspan:.1f};"
+        + _latency_fields(klat, kttft, kitl)
+        + f";prefill_chunk={prefill_chunk}"
+        + f";itl_p95_vs_continuous={_pctl(citl, 95) / max(_pctl(kitl, 95), 1e-9):.2f}x",
+    ))
+
     from repro.train.quantized_serving import quantize_params_for_serving
 
-    # the fake-quant engines are done (their rows are emitted): drop them
-    # before building the packed engine so only one KV pool is ever live
-    del eng, server
+    del ceng, server
     qparams, _ = quantize_params_for_serving(params, axes, cfg, packed=True)
     peng = ContinuousBatchingEngine(
         qparams, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,
-        layout="paged", block_size=block, chunk=chunk,
-        clock=lambda: time.perf_counter() - box["t0"],
+        layout="paged", block_size=block, chunk=chunk, clock=clock,
     )
     box["t0"] = time.perf_counter()
     _run_continuous(peng, [dict(r, arrival=0.0) for r in warm], box["t0"])
     box["t0"] = t0 = time.perf_counter()
-    plat, ptoks, pspan = _run_continuous(peng, trace, t0)
-    pp50, pp95 = _percentiles(plat)
+    plat, pttft, pitl, ptoks, pspan = _run_continuous(peng, trace, t0)
     rows.append(row(
-        "serving/continuous_packed", pp50 * 1e3,
-        f"tok_s={ptoks / pspan:.1f};p50_ms={pp50:.1f};p95_ms={pp95:.1f};"
-        f"vs_fakequant_tok_s={ctoks / cspan:.1f}",
+        "serving/continuous_packed", _pctl(plat, 50) * 1e3,
+        f"tok_s={ptoks / pspan:.1f};"
+        + _latency_fields(plat, pttft, pitl)
+        + f";vs_fakequant_tok_s={ctoks / cspan:.1f}",
     ))
     return rows
 

@@ -15,7 +15,9 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §6):
 """
 
 import argparse
+import json
 import pathlib
+import platform
 import sys
 import time
 
@@ -33,6 +35,10 @@ def main() -> None:
                     help="seconds-scale CI subset: the serving-path suites "
                          "(decode incl. packed weights, continuous "
                          "batching) plus the allocation-free memory rows")
+    ap.add_argument("--out", default=None,
+                    help="write a JSON results artifact to this path "
+                         "(default: BENCH_serving.json under --smoke, so "
+                         "CI tracks the serving perf trajectory per run)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -68,16 +74,47 @@ def main() -> None:
             "decode": lambda: bench_decode.run(smoke=True),
             "serving": lambda: bench_serving.run(smoke=True),
         }
+    def jsonable(x):
+        """Suites return CSV-row lists OR nested result dicts (e.g.
+        bench_memory) — keep whichever structure intact in the artifact,
+        stringifying only leaves json can't encode."""
+        try:
+            json.dumps(x)
+            return x
+        except TypeError:
+            if isinstance(x, dict):
+                return {str(k): jsonable(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return [jsonable(v) for v in x]
+            return str(x)
+
     print("name,us_per_call,derived")
+    results: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
         try:
-            fn()
+            rows = fn()
         except Exception as e:  # noqa: BLE001 — a failing suite shouldn't kill the run
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
-        print(f"# suite {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+            rows = None
+            results[name] = {"error": f"{type(e).__name__}:{e}"}
+        dt = time.time() - t0
+        if rows is not None:
+            results[name] = {"rows": jsonable(rows), "seconds": round(dt, 2)}
+        print(f"# suite {name} done in {dt:.1f}s", file=sys.stderr)
+
+    out = args.out or ("BENCH_serving.json" if args.smoke else None)
+    if out:
+        payload = {
+            "smoke": bool(args.smoke),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "suites": results,
+        }
+        pathlib.Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"# wrote {out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

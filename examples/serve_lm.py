@@ -47,6 +47,11 @@ def main():
                     help="serve via the continuous-batching engine "
                          "(ragged prompts, paged KV pool)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="token budget per step for chunked admission "
+                         "prefill (--continuous only): long prompts "
+                         "stream in as bounded slices instead of "
+                         "stalling live decode streams")
     ap.add_argument("--packed", action="store_true",
                     help="export weights to the packed integer serving "
                          "layout first: decode runs the W1A8 GEMV kernel "
@@ -87,7 +92,10 @@ def main():
         eng = ContinuousBatchingEngine(
             params, cfg, num_slots=max(2, args.batch // 2), max_len=max_len,
             scfg=scfg, layout="paged", block_size=args.block_size,
+            prefill_chunk=args.prefill_chunk,
         )
+        if args.prefill_chunk and eng.prefill_chunk is None:
+            print("note: config is not chunk-safe; one-shot admission")
         rng = jax.random
         t0 = time.time()
         for i in range(args.batch):

@@ -77,10 +77,16 @@ def store(backend: str, table: dict[tuple, tuple[int, int]]) -> None:
             {_encode_key(k): list(v) for k, v in sorted(merged.items())},
             indent=0,
         )
+        # crash/concurrency safety: write a temp file IN THE SAME
+        # DIRECTORY, fsync it, then atomically os.replace it into place —
+        # a reader (or a crash at any point) sees either the old complete
+        # file or the new complete file, never a partial write.
         fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
                 f.write(payload)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         except BaseException:
             os.unlink(tmp)

@@ -6,8 +6,13 @@ trainer / server / dry-run:
     init_model(key, cfg)                          -> (params, axes)
     loss_fn(params, batch, cfg)                   -> (loss, metrics)
     forward(params, batch, cfg)                   -> (logits, aux)
+    forward_chunk(params, toks, caches, pos, cfg) -> (logits (B,T,V), caches)
     prefill(params, batch, cfg, cache_len)        -> (logits_last, caches)
     decode_step(params, tokens, caches, pos, cfg) -> (logits, caches)
+
+Decoder families serve through ONE forward implementation: ``prefill`` is
+``forward_chunk`` from an empty cache and ``decode_step`` is
+``forward_chunk`` with T=1 (see ``models.transformer``).
 
 ``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
 model input of a benchmark cell (weak-type-correct, shardable, zero
@@ -44,26 +49,40 @@ def loss_fn(params, batch, cfg: ModelConfig):
 
 
 def prefill(params, batch, cfg: ModelConfig, cache_len: int, last_pos=None):
-    """``last_pos`` (optional traced scalar) selects the logits position for
-    bucket-padded prompts (decoder families only; see transformer.prefill)."""
+    """``last_pos`` (optional traced scalar) selects the logits position
+    for bucket-padded prompts.  Both families share the signature — the
+    serving tiers no longer special-case enc-dec configs."""
     if last_pos is None:
         return _mod(cfg).prefill(params, batch, cfg, cache_len)
-    if cfg.family == "encdec":
-        raise NotImplementedError("bucketed prefill is decoder-family only")
     return _mod(cfg).prefill(params, batch, cfg, cache_len, last_pos)
 
 
 def decode_step(params, tokens, caches, pos, cfg: ModelConfig, active=None):
     """``pos`` may be scalar (lockstep) or (B,) (per-slot, continuous
     batching); ``active`` optionally masks per-slot cache writes.  Both
-    extensions are decoder-family only — encdec serving stays lockstep."""
+    families accept both extensions."""
     if active is None and jnp.asarray(pos).ndim == 0:
         return _mod(cfg).decode_step(params, tokens, caches, pos, cfg)
+    return _mod(cfg).decode_step(params, tokens, caches, pos, cfg, active)
+
+
+def forward_chunk(
+    params, tokens, caches, pos, cfg: ModelConfig,
+    active=None, lengths=None, logits_at=None,
+):
+    """Cache-resident multi-token forward (decoder families): T tokens per
+    slot against resident caches, at per-slot position offsets — the one
+    serving forward behind ``prefill`` (empty cache) and ``decode_step``
+    (T=1).  See ``models.transformer.forward_chunk`` for the contract."""
     if cfg.family == "encdec":
         raise NotImplementedError(
-            "per-slot pos/active decode is not supported for encdec"
+            "forward_chunk is decoder-family only; encdec prefill keeps "
+            "its fused encode+decoder path"
         )
-    return _mod(cfg).decode_step(params, tokens, caches, pos, cfg, active)
+    return _mod(cfg).forward_chunk(
+        params, tokens, caches, pos, cfg, active=active, lengths=lengths,
+        logits_at=logits_at,
+    )
 
 
 def init_cache(

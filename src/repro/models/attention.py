@@ -5,9 +5,12 @@ paper §3.1) in quantized modes; on packed serving weights
 true-integer W1A8 kernel tier — decode-shaped calls hit the fused-act-quant
 ``w1a8_gemv`` (see ``core.bitlinear`` / ``kernels.ops``).
 
-Cache-adapter protocol (decode): each layer owns a dict of cache arrays;
-``*_prefill`` fills it from a full sequence and ``*_decode`` extends it by
-one token.  Two interchangeable layouts ride the same call sites:
+Cache-adapter protocol (serving): each layer owns a dict of cache arrays
+and ``*_chunk`` extends it by T tokens at per-slot position offsets — the
+single cache-resident forward the serving stack runs.  Prefill is a chunk
+into an empty cache, decode is a chunk with T=1 (``*_decode`` is the
+preserved one-token fast path the chunk entry points dispatch to).  Two
+interchangeable layouts ride the same call sites:
 
 * dense — ``{"k", "v"}`` ring buffers ``(B, L, H, D)`` (L < max_len on
   sliding-window layers; slot(p) = p % L *is* the window).
@@ -226,6 +229,189 @@ def _decode_mask(pos: Array, skv: int, ring: bool) -> Array:
     return (j[None, :] <= lim[:, None])[:, None, None, :]
 
 
+def _rope_at(x: Array, posmat: Array, head_dim: int, theta) -> Array:
+    """Rotate a chunk of tokens at absolute positions ``posmat`` (B|1, T).
+    x: (B, T, H, D).
+
+    Elementwise rotate-half with per-(slot, token) angle tables — for a
+    single token this computes exactly what :func:`_rope_decode` computes,
+    and for a shared scalar offset it matches :func:`apply_rope` over a
+    ``(T,)`` table (the angles are elementwise equal, so the products
+    are bitwise equal).
+    """
+    sin, cos = rope_table(posmat.reshape(-1), head_dim, theta)
+    sin = sin.reshape(posmat.shape + (-1,))[:, :, None, :].astype(x.dtype)
+    cos = cos.reshape(posmat.shape + (-1,))[:, :, None, :].astype(x.dtype)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _pos_matrix(pos: Array, t: int) -> Array:
+    """Absolute positions of a T-token chunk: (B|1, T) from the per-slot
+    (or shared scalar) position of the chunk's first token."""
+    offs = jnp.arange(t, dtype=jnp.int32)
+    if pos.ndim == 0:
+        return (pos + offs)[None]
+    return pos[:, None] + offs[None]
+
+
+def _chunk_valid(
+    b: int, t: int, active: Array | None, lengths: Array | None
+) -> Array | None:
+    """(B, T) bool — which chunk entries really carry a token (``lengths``
+    right-pads a ragged final slice; ``active`` gates whole slots)."""
+    if active is None and lengths is None:
+        return None
+    ok = jnp.ones((b, t), bool)
+    if lengths is not None:
+        ok = ok & (jnp.arange(t)[None, :] < lengths[:, None])
+    if active is not None:
+        ok = ok & active[:, None]
+    return ok
+
+
+def _span_write(cache: Array, new: Array, rows: Array, valid: Array | None):
+    """Dense-adapter span write: T tokens per slot at per-(slot, token)
+    rows.  cache: (B, L, ...); new: (B, T, ...); rows: (B, T) int32.
+    Invalid entries are routed out of bounds and dropped (no arithmetic on
+    resident values — writes are pure placements)."""
+    b, t = rows.shape
+    if valid is not None:
+        rows = jnp.where(valid, rows, cache.shape[1])  # OOB -> mode="drop"
+    bi = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
+    return cache.at[bi, rows].set(new.astype(cache.dtype), mode="drop")
+
+
+def _span_mask(posmat: Array, skv: int) -> Array:
+    """Causal validity of a chunk read, (B|1, 1, T, Skv): query at absolute
+    position q attends cache columns j <= q.  Columns written by *later*
+    chunk tokens sit at j > q, so one prefix rule masks both the resident
+    garbage and the in-chunk future (the T=1 case is exactly
+    :func:`_decode_mask` with ring=False)."""
+    j = jnp.arange(skv)
+    return (j[None, None, :] <= posmat[..., None])[:, None]
+
+
+def _ring_chunk(q, k, v, cache: dict, posmat: Array, valid: Array | None):
+    """Sequential per-token chunk over a RING cache (sliding-window layer).
+
+    A parallel span write is wrong here: writing token ``p`` evicts the
+    resident key at ``p - W``, which earlier queries in the same chunk
+    still attend.  Scanning write->read per token reproduces the decode
+    semantics exactly, token for token, so chunked prefill over a ring is
+    bitwise the decode stream — while the projections around it stay
+    chunk-parallel.  q/k/v: (B, T, H, D); posmat: (B|1, T).
+    """
+    b, t = q.shape[:2]
+    l = cache["k"].shape[1]
+    posmat = jnp.broadcast_to(posmat, (b, t))
+    ok = jnp.broadcast_to(valid, (b, t)) if valid is not None else None
+
+    def step(carry, inp):
+        kc, vc = carry
+        qt, kt, vt, pt, okt = inp  # (B, H, D) x3, (B,), (B,) | None
+        kc = _slot_write(kc, kt[:, None], pt % l, okt)
+        vc = _slot_write(vc, vt[:, None], pt % l, okt)
+        mask = _decode_mask(pt, l, ring=True)
+        out = _sdpa(qt[:, None], kc.astype(qt.dtype), vc.astype(qt.dtype), mask)
+        return (kc, vc), out[:, 0]
+
+    xs = (
+        jnp.moveaxis(q, 1, 0),
+        jnp.moveaxis(k, 1, 0),
+        jnp.moveaxis(v, 1, 0),
+        posmat.T,
+        ok.T if ok is not None else jnp.ones((t, b), bool),
+    )
+    (kc, vc), outs = jax.lax.scan(step, (cache["k"], cache["v"]), xs)
+    return jnp.moveaxis(outs, 0, 1), {"k": kc, "v": vc}
+
+
+def attention_chunk(
+    params,
+    x: Array,
+    cache: dict,
+    pos: Array,
+    cfg: ModelConfig,
+    theta: float,
+    window=0,
+    active: Array | None = None,
+    lengths: Array | None = None,
+    ring: bool = False,
+    read_to: int | None = None,
+):
+    """Cache-resident multi-token attention: process T tokens per slot.
+
+    x: (B, T, D); pos: scalar or (B,) int32 — absolute position of
+    x[:, 0].  K/V for tokens ``t < lengths[b]`` (default: all T) of active
+    slots are written into the *existing* cache — dense ring, dense full,
+    or paged — and each query attends the already-resident prefix plus the
+    in-chunk causal keys.  Prefill is this from an empty cache; decode is
+    T=1 (dispatched to :func:`attention_decode`, the preserved one-token
+    fast path, so decode streams are bit-for-bit unchanged).
+
+    ``ring`` (static) marks a sliding-window layer whose dense cache is
+    shorter than the position range — those take the sequential in-chunk
+    path (:func:`_ring_chunk`); everything else reads the updated cache in
+    parallel under one prefix mask.  ``read_to`` (static) bounds that read
+    when the caller knows no position >= read_to can be attended — prefill
+    from an empty cache passes its prompt length, keeping scoring
+    O(S*S) instead of O(S*cache_len); the masked-out columns it drops
+    contribute exact zeros to the softmax either way.
+
+    Returns (y (B, T, D), new_cache).
+    """
+    b, t = x.shape[:2]
+    if t == 1 and lengths is None:
+        return attention_decode(
+            params, x, cache, pos, cfg, theta, window=window, active=active
+        )
+    del window  # window semantics are carried by the cache length (ring)
+    q, k, v = _project_qkv(params, x, cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    posmat = _pos_matrix(pos, t)
+    if cfg.pos_embedding == "rope":
+        q = _rope_at(q, posmat, cfg.head_dim, theta)
+        k = _rope_at(k, posmat, cfg.head_dim, theta)
+
+    if "table" in cache:  # paged adapter: span-scatter straight into pages
+        from repro.serve import kv_pool  # deferred: serve imports models
+
+        posv = jnp.broadcast_to(pos, (b,))
+        kp = kv_pool.write_span(
+            cache["kpool"], cache["table"], posv, k, active, lengths
+        )
+        vp = kv_pool.write_span(
+            cache["vpool"], cache["table"], posv, v, active, lengths
+        )
+        keys = kv_pool.read(kp, cache["table"])
+        vals = kv_pool.read(vp, cache["table"])
+        mask = _span_mask(jnp.broadcast_to(posmat, (b, t)), keys.shape[1])
+        out = _sdpa(q, keys.astype(q.dtype), vals.astype(q.dtype), mask)
+        new_cache = {"kpool": kp, "vpool": vp, "table": cache["table"]}
+        return _out_proj(params, out, cfg), new_cache
+
+    valid = _chunk_valid(b, t, active, lengths)
+    if ring:
+        out, new_cache = _ring_chunk(q, k, v, cache, posmat, valid)
+    else:
+        skv = cache["k"].shape[1]
+        lim = skv if read_to is None else min(read_to, skv)
+        rows = jnp.broadcast_to(posmat, (b, t))
+        new_k = _span_write(cache["k"], k, rows, valid)
+        new_v = _span_write(cache["v"], v, rows, valid)
+        new_k = shard_hint(new_k, "batch", "cache_seq", "cache_heads", None)
+        new_v = shard_hint(new_v, "batch", "cache_seq", "cache_heads", None)
+        mask = _span_mask(posmat, lim)
+        out = _sdpa(
+            q, new_k[:, :lim].astype(q.dtype), new_v[:, :lim].astype(q.dtype),
+            mask,
+        )
+        new_cache = {"k": new_k, "v": new_v}
+    return _out_proj(params, out, cfg), new_cache
+
+
 def attention_decode(
     params,
     x: Array,
@@ -380,9 +566,9 @@ def mla_attention(
     x: Array,
     cfg: ModelConfig,
     positions: Array,
-    cache_len: Optional[int] = None,
 ):
-    """Full-sequence MLA (train / prefill)."""
+    """Full-sequence MLA (train / eval; serving goes through
+    :func:`mla_chunk`)."""
     b, s, _ = x.shape
     nh = cfg.n_heads
     q_nope, q_rope = _mla_q(params, x, cfg)
@@ -404,15 +590,9 @@ def mla_attention(
     scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
     out = _sdpa(q, k, v, mask, scale=scale)
     subln = params.get("subln")
-    y = bitlinear(params["wo"], out.reshape(b, s, -1), cfg.quant, sublayer_norm=subln)
-    if cache_len is None:
-        return y
-    pad = [(0, 0), (0, cache_len - s), (0, 0)]
-    cache = {
-        "ckv": jnp.pad(ckv, pad),
-        "krope": jnp.pad(k_rope[:, :, 0], pad),
-    }
-    return y, cache
+    return bitlinear(
+        params["wo"], out.reshape(b, s, -1), cfg.quant, sublayer_norm=subln
+    )
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
@@ -427,6 +607,64 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
         "krope": ("batch", "cache_seq", None),
     }
     return cache, axes
+
+
+def mla_chunk(
+    params,
+    x: Array,
+    cache: dict,
+    pos: Array,
+    cfg: ModelConfig,
+    active: Array | None = None,
+    lengths: Array | None = None,
+    read_to: int | None = None,
+):
+    """Cache-resident multi-token MLA: span-write T compressed latents,
+    expand the latent cache (up to the static ``read_to`` bound — see
+    :func:`attention_chunk`), and score each query against its causal
+    prefix.  T=1 dispatches to :func:`mla_decode` (bit-for-bit the decode
+    stream); the latent cache stays dense in both layouts (caching only
+    ``(B, L, kv_lora_rank)`` latents is already the memory win paging
+    chases).  Returns (y (B, T, D), new_cache)."""
+    b, t = x.shape[:2]
+    if t == 1 and lengths is None:
+        return mla_decode(params, x, cache, pos, cfg, active=active)
+    nh = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, x, cfg)
+    down = bitlinear(params["wkv_down"], x, cfg.quant)
+    ckv_new = rmsnorm(params["kv_norm"], down[..., : cfg.kv_lora_rank])
+    krope_new = down[..., cfg.kv_lora_rank :]
+    pos = jnp.asarray(pos, jnp.int32)
+    posmat = _pos_matrix(pos, t)
+    q_rope = _rope_at(q_rope, posmat, cfg.qk_rope_dim, cfg.rope_theta)
+    krope_new = _rope_at(
+        krope_new[:, :, None, :], posmat, cfg.qk_rope_dim, cfg.rope_theta
+    )[:, :, 0]
+
+    valid = _chunk_valid(b, t, active, lengths)
+    rows = jnp.broadcast_to(posmat, (b, t))
+    new_ckv = _span_write(cache["ckv"], ckv_new, rows, valid)
+    new_krope = _span_write(cache["krope"], krope_new, rows, valid)
+    skv = new_ckv.shape[1]
+    lim = skv if read_to is None else min(read_to, skv)
+    k_nope, v = _mla_expand_kv(params, new_ckv[:, :lim].astype(x.dtype), cfg)
+    k = jnp.concatenate(
+        [
+            k_nope,
+            jnp.broadcast_to(
+                new_krope[:, :lim].astype(x.dtype)[:, :, None, :],
+                (b, lim, nh, cfg.qk_rope_dim),
+            ),
+        ],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask = _span_mask(posmat, lim)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    out = _sdpa(q, k, v, mask, scale=scale)
+    subln = params.get("subln")
+    y = bitlinear(params["wo"], out.reshape(b, t, -1), cfg.quant, sublayer_norm=subln)
+    return y, {"ckv": new_ckv, "krope": new_krope}
 
 
 def mla_decode(

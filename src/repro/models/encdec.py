@@ -194,8 +194,14 @@ def lm_loss(params, batch: dict, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
-    """Encode audio, run the decoder prompt, fill caches."""
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int,
+            last_pos=None):
+    """Encode audio, run the decoder prompt, fill caches.
+
+    Signature-aligned with ``models.transformer.prefill`` so the serving
+    tiers never special-case enc-dec configs: ``last_pos`` (traced scalar)
+    reads the logits at decoder position ``last_pos - 1`` instead of the
+    final row (bucket-padded prompts)."""
     memory = encode(params, batch["frames"], cfg)
     tokens = batch["tokens"]
     x = embed(params["embed"], tokens, cfg)
@@ -207,24 +213,42 @@ def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
         return x, cache
 
     x, caches = _scan_or_unroll(body, x, params["decoder"], cfg, cfg.n_layers)
-    x = rmsnorm(params["final_norm"], x[:, -1:])
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32) - 1, 1, axis=1
+        )
+    x = rmsnorm(params["final_norm"], xl)
     logits = unembed(params["embed"], x, cfg)
     return logits[:, 0], caches
 
 
-def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig):
-    """tokens (B,1). caches from :func:`prefill` (stacked over layers)."""
+def decode_step(params, tokens: Array, caches, pos: Array, cfg: ModelConfig,
+                active: Array | None = None):
+    """tokens (B,1). caches from :func:`prefill` (stacked over layers).
+
+    Signature-aligned with ``models.transformer.decode_step``: ``pos`` may
+    be the lockstep scalar or a (B,) per-slot vector, and ``active``
+    optionally masks per-slot cache writes (the self-attention cache
+    adapter already speaks both; only the learned-position lookup needs
+    the per-slot gather)."""
     x = embed(params["embed"], tokens, cfg)
-    pos_emb = jax.lax.dynamic_slice_in_dim(
-        params["dec_pos"]["pos"], pos, 1, axis=0
-    )
-    x = x + pos_emb.astype(x.dtype)[None]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos_emb = jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"]["pos"], pos, 1, axis=0
+        )[None]  # (1, 1, D)
+    else:
+        pos_emb = jnp.take(params["dec_pos"]["pos"], pos, axis=0)[:, None]
+    x = x + pos_emb.astype(x.dtype)
 
     def body(x, inp):
         lp, cache = inp
         h = rmsnorm(lp["pre_norm"], x)
         y, new_self = attn_mod.attention_decode(
-            lp["self_attn"], h, cache["self"], pos, cfg, cfg.rope_theta
+            lp["self_attn"], h, cache["self"], pos, cfg, cfg.rope_theta,
+            active=active,
         )
         x = x + y
         h = rmsnorm(lp["cross_norm"], x)

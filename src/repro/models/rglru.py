@@ -76,12 +76,29 @@ def _assoc_scan(log_a: Array, b: Array) -> Array:
     return h
 
 
-def rglru_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
-    """Full-sequence recurrent mixing. x: (B,S,D) -> (B,S,D)."""
+def rglru_block(
+    params,
+    x: Array,
+    cfg: ModelConfig,
+    return_cache: bool = False,
+    cache: dict | None = None,
+):
+    """Multi-token recurrent mixing chunk. x: (B,S,D) -> (B,S,D).
+
+    ``cache`` (hidden state + conv tail from :func:`init_rglru_cache` / a
+    previous chunk) resumes the recurrence mid-stream: the initial state
+    enters as ``exp(cumsum log_a) * h0`` on top of the zero-state scan,
+    which is the closed form of carrying ``h0`` through the gated
+    recurrence.  ``cache=None`` keeps the from-scratch training/prefill
+    path (a zero cache adds an exact zero — same result).
+    """
     gate = jax.nn.gelu(bitlinear(params["wy"], x, cfg.quant), approximate=True)
     u = bitlinear(params["wx"], x, cfg.quant)
     k = params["conv_w"].shape[0]
-    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    if cache is None:
+        up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
     conv = sum(
         up[:, i : i + u.shape[1], :] * params["conv_w"][i][None, None].astype(u.dtype)
         for i in range(k)
@@ -89,11 +106,18 @@ def rglru_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
     conv = shard_hint(conv, "batch", "seq", "act_ffn")
     log_a, gated = _rglru_gates(params, conv, cfg)
     h = _assoc_scan(log_a, gated)
+    if cache is not None:
+        h = h + jnp.exp(jnp.cumsum(log_a, axis=1)) * cache["h"][:, None, :]
     y = bitlinear(params["wout"], h.astype(x.dtype) * gate, cfg.quant)
     if not return_cache:
         return y
-    cache = {"h": h[:, -1], "conv": u[:, u.shape[1] - (k - 1) :, :]}
-    return y, cache
+    if cache is None:
+        tail = u[:, u.shape[1] - (k - 1) :, :]
+    else:
+        tail = jnp.concatenate(
+            [cache["conv"], u.astype(cache["conv"].dtype)], axis=1
+        )[:, -(k - 1) :, :]
+    return y, {"h": h[:, -1], "conv": tail}
 
 
 def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):

@@ -169,10 +169,16 @@ def ssd_chunked(
     return y, final
 
 
-def _causal_conv(x: Array, w: Array, b: Array) -> Array:
-    """Depthwise causal conv: x (B, L, C), w (K, C)."""
+def _causal_conv(x: Array, w: Array, b: Array, prev: Array | None = None) -> Array:
+    """Depthwise causal conv: x (B, L, C), w (K, C).  ``prev`` (B, K-1, C)
+    seeds the window with the cached tail of the preceding tokens (chunked
+    serving); ``None`` zero-pads, which is bitwise the same as a zero
+    tail — a fresh cache reproduces the from-scratch prefill exactly."""
     k = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
     out = jnp.zeros_like(x)
     for i in range(k):  # K is 4 — unrolled adds, no gather
         out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
@@ -210,11 +216,24 @@ def _apply_out_proj(params, y, cfg: ModelConfig):
     return bitlinear(params["out_proj"], y, cfg.quant), jnp.zeros((), jnp.float32)
 
 
-def mamba_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
-    """Full-sequence Mamba-2 mixing block. x: (B, S, D).
+def mamba_block(
+    params,
+    x: Array,
+    cfg: ModelConfig,
+    return_cache: bool = False,
+    cache: dict | None = None,
+):
+    """Multi-token Mamba-2 mixing chunk. x: (B, S, D).
 
-    Returns (y, aux) or (y, aux, cache) with cache = {conv tail, final state}
-    so decode can continue (prefill).
+    ``cache`` (conv tail + SSD state from :func:`init_mamba_cache` /
+    a previous chunk) resumes the recurrence mid-stream — the model
+    stack's ``forward_chunk`` runs every chunk with T > 1 through this
+    path.  ``cache=None`` is the from-scratch prefill (bitwise identical
+    to a zero cache: the conv sees a zero tail either way and the SSD
+    scan starts from a zero state).
+
+    Returns (y, aux) or (y, aux, cache) with cache = {conv tail, final
+    state} so decode can continue.
     """
     bsz, s, _ = x.shape
     d_in, nheads, conv_dim, _ = _dims(cfg)
@@ -224,7 +243,8 @@ def mamba_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
     z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
     xbc = jax.nn.silu(
         _causal_conv(
-            xbc_raw, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)
+            xbc_raw, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+            prev=None if cache is None else cache["conv"],
         )
     )
     xs = xbc[..., :d_in]
@@ -242,6 +262,7 @@ def mamba_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
         b_mat.astype(jnp.float32),
         c_mat.astype(jnp.float32),
         cfg.ssm_chunk,
+        initial_state=None if cache is None else cache["state"],
     )
     y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(bsz, s, d_in).astype(x.dtype)
@@ -251,11 +272,13 @@ def mamba_block(params, x: Array, cfg: ModelConfig, return_cache: bool = False):
     if not return_cache:
         return out, aux_in + aux_out
     k = cfg.conv_kernel
-    cache = {
-        "conv": xbc_raw[:, s - (k - 1) :, :],
-        "state": final_state,
-    }
-    return out, aux_in + aux_out, cache
+    if cache is None:
+        tail = xbc_raw[:, s - (k - 1) :, :]
+    else:  # short chunks keep part of the previous tail
+        tail = jnp.concatenate(
+            [cache["conv"], xbc_raw.astype(cache["conv"].dtype)], axis=1
+        )[:, -(k - 1) :, :]
+    return out, aux_in + aux_out, {"conv": tail, "state": final_state}
 
 
 # ---------------------------------------------------------------------------

@@ -12,8 +12,15 @@ API:
   init_model(key, cfg)                      -> (params, axes)
   forward(params, batch, cfg)               -> (logits, aux_loss)
   init_cache(cfg, batch, max_len, dtype)    -> (cache, axes)
-  prefill(params, batch, cache, cfg)        -> (logits_last, cache)
+  forward_chunk(params, toks, cache, pos, cfg) -> (logits (B,T,V), cache)
+  prefill(params, batch, cfg, cache_len)    -> (logits_last, cache)
   decode_step(params, token, cache, pos, cfg) -> (logits, cache)
+
+Serving runs ONE forward implementation: ``forward_chunk`` processes T
+tokens per slot against resident caches (dense ring or paged), ``prefill``
+is forward_chunk from an empty cache, and ``decode_step`` is forward_chunk
+with T=1.  ``forward`` keeps the cache-free full-sequence path for
+train/eval.
 """
 
 from __future__ import annotations
@@ -176,9 +183,9 @@ def _apply_mixer(
     cfg: ModelConfig,
     rope_tabs,
     meta: dict,
-    cache_len: Optional[int] = None,
 ):
-    """Full-sequence mixer. Returns (y, aux, cache_or_None)."""
+    """Full-sequence mixer (train / eval — no cache).  Serving paths run
+    :func:`forward_chunk` instead.  Returns (y, aux)."""
     zero = jnp.zeros((), jnp.float32)
     if spec.mixer == "attn":
         sin, cos = rope_tabs
@@ -190,31 +197,18 @@ def _apply_mixer(
             cos = jnp.where(use_local, cos_l, cos_g)
         else:
             sin, cos = sin[0], cos[0]
-        blk_cache_len = cache_len
-        if cache_len and spec.window > 0:
-            blk_cache_len = min(spec.window, cache_len)  # ring cache length
         out = attn_mod.attention(
             bparams["mixer"], x, cfg, sin, cos,
             window=meta["window"], causal=cfg.family != "encoder",
-            cache_len=blk_cache_len,
         )
-        return (out[0], zero, out[1]) if cache_len else (out, zero, None)
+        return out, zero
     if spec.mixer == "mla":
         pos = jnp.arange(x.shape[1])
-        out = attn_mod.mla_attention(
-            bparams["mixer"], x, cfg, pos, cache_len=cache_len
-        )
-        return (out[0], zero, out[1]) if cache_len else (out, zero, None)
+        return attn_mod.mla_attention(bparams["mixer"], x, cfg, pos), zero
     if spec.mixer == "ssm":
-        out = ssm_mod.mamba_block(
-            bparams["mixer"], x, cfg, return_cache=cache_len is not None
-        )
-        return (out[0], out[1], out[2]) if cache_len else (out[0], out[1], None)
+        return ssm_mod.mamba_block(bparams["mixer"], x, cfg)
     if spec.mixer == "rec":
-        out = rglru_mod.rglru_block(
-            bparams["mixer"], x, cfg, return_cache=cache_len is not None
-        )
-        return (out[0], zero, out[1]) if cache_len else (out, zero, None)
+        return rglru_mod.rglru_block(bparams["mixer"], x, cfg), zero
     raise ValueError(spec.mixer)
 
 
@@ -225,11 +219,10 @@ def _apply_block(
     cfg: ModelConfig,
     rope_tabs,
     meta,
-    cache_len: Optional[int] = None,
 ):
-    """Pre-norm residual block. Returns (x, aux, cache_or_None)."""
+    """Pre-norm residual block. Returns (x, aux)."""
     h = rmsnorm(bparams["pre_norm"], x)
-    y, aux, cache = _apply_mixer(bparams, spec, h, cfg, rope_tabs, meta, cache_len)
+    y, aux = _apply_mixer(bparams, spec, h, cfg, rope_tabs, meta)
     x = x + y
     if spec.ffn is not None:
         h = rmsnorm(bparams["ffn_norm"], x)
@@ -243,7 +236,7 @@ def _apply_block(
     # rule override: the residual stream shards over `model` between
     # blocks, turning TP all-reduces into reduce-scatter/all-gather pairs
     x = shard_hint(x, "batch", "resid_seq", "act_embed")
-    return x, aux, cache
+    return x, aux
 
 
 # ---------------------------------------------------------------------------
@@ -338,92 +331,69 @@ def _rope_tabs(cfg: ModelConfig, positions: Array):
 # ---------------------------------------------------------------------------
 
 
-def _run_segments(
-    params, x: Array, cfg: ModelConfig, rope_tabs, cache_len: Optional[int] = None
-):
-    """Returns (x, aux_total, caches) — caches is None unless cache_len set."""
+def _run_segments(params, x: Array, cfg: ModelConfig, rope_tabs):
+    """Train/eval segment walk (no caches — serving walks the same
+    segments through :func:`forward_chunk`).  Returns (x, aux_total)."""
     segs = build_segments(cfg)
     aux_total = jnp.zeros((), jnp.float32)
-    all_caches = [] if cache_len else None
     for si, seg in enumerate(segs):
         seg_p = params["segments"][si]
         metas = _segment_meta(cfg, seg)
         if seg.repeats == 1:
-            seg_cache = {}
             for bi, spec in enumerate(seg.blocks):
                 meta = {k: v[0] for k, v in metas[bi].items()}
-                x, aux, c = _apply_block(
-                    seg_p[f"b{bi}"], spec, x, cfg, rope_tabs, meta, cache_len
+                x, aux = _apply_block(
+                    seg_p[f"b{bi}"], spec, x, cfg, rope_tabs, meta
                 )
                 aux_total = aux_total + aux
-                if cache_len:
-                    seg_cache[f"b{bi}"] = c
-            if cache_len:
-                all_caches.append(seg_cache)
         elif not cfg.scan_layers:
             # unrolled execution (scan_layers=False): bigger HLO, exact
             # per-layer cost accounting; used by roofline calibration.
             # remat is applied per group so compute matches the scanned path.
             def one_group(x_aux, layer_p, metas_r, rr):
                 x, aux_acc = x_aux
-                caches = {}
                 for bi, spec in enumerate(seg.blocks):
-                    x, aux, c = _apply_block(
+                    x, aux = _apply_block(
                         layer_p[f"b{bi}"], spec, x, cfg, rope_tabs,
-                        metas_r[f"b{bi}"], cache_len,
+                        metas_r[f"b{bi}"],
                     )
                     aux_acc = aux_acc + aux
-                    if cache_len:
-                        caches[f"b{bi}"] = c
-                return (x, aux_acc), caches
+                return (x, aux_acc)
 
-            if cfg.remat and not cache_len:
+            if cfg.remat:
                 one_group = jax.checkpoint(
                     one_group,
                     policy=jax.checkpoint_policies.nothing_saveable,
                     static_argnums=(3,),
                 )
-            reps = []
             for r in range(seg.repeats):
                 layer_p = jax.tree.map(lambda t: t[r], seg_p)
                 metas_r = {
                     f"b{bi}": {k: v[r] for k, v in metas[bi].items()}
                     for bi in range(len(seg.blocks))
                 }
-                (x, aux_total), layer_cache = one_group(
-                    (x, aux_total), layer_p, metas_r, r
-                )
-                reps.append(layer_cache)
-            if cache_len:
-                all_caches.append(
-                    jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
-                )
+                x, aux_total = one_group((x, aux_total), layer_p, metas_r, r)
         else:
 
             def body(carry, inp):
                 x, aux_acc = carry
                 bp_all, meta_all = inp
                 aux_layer = jnp.zeros((), jnp.float32)
-                caches = {}
                 for bi, spec in enumerate(seg.blocks):
-                    x, aux, c = _apply_block(
+                    x, aux = _apply_block(
                         bp_all[f"b{bi}"], spec, x, cfg, rope_tabs,
-                        meta_all[f"b{bi}"], cache_len,
+                        meta_all[f"b{bi}"],
                     )
                     aux_layer = aux_layer + aux
-                    if cache_len:
-                        caches[f"b{bi}"] = c
-                return (x, aux_acc + aux_layer), (caches if cache_len else None)
+                return (x, aux_acc + aux_layer), None
 
-            if cfg.remat and not cache_len:
+            if cfg.remat:
                 body = jax.checkpoint(
                     body, policy=jax.checkpoint_policies.nothing_saveable
                 )
             xs = (seg_p, {f"b{bi}": metas[bi] for bi in range(len(seg.blocks))})
-            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
-            if cache_len:
-                all_caches.append(ys)
-    return x, aux_total, all_caches
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), xs)
+    return x, aux_total
 
 
 def _embed_inputs(params, batch: dict, cfg: ModelConfig) -> Array:
@@ -441,7 +411,7 @@ def forward(params, batch: dict, cfg: ModelConfig):
     x = shard_hint(x, "batch", "seq", "act_embed")
     positions = jnp.arange(x.shape[1])
     tabs = _rope_tabs(cfg, positions)
-    x, aux, _ = _run_segments(params, x, cfg, tabs)
+    x, aux = _run_segments(params, x, cfg, tabs)
     x = rmsnorm(params["final_norm"], x)
     head = params.get("lm_head", params["embed"])
     logits = unembed(head, x, cfg)
@@ -545,10 +515,17 @@ def _freeze_inactive(new_cache, old_cache, active):
     return jax.tree.map(keep, new_cache, old_cache)
 
 
-def _mixer_decode(
+def _mixer_chunk(
     bparams, spec: BlockSpec, x, cache, pos, cfg: ModelConfig, meta,
-    active=None,
+    active=None, lengths=None, read_to=None,
 ):
+    """T-token cache-resident mixer.  Attention variants run their chunk
+    entry points (which keep the one-token decode fast path at T=1);
+    recurrent mixers run the block form from their cached state for T > 1
+    and the preserved step form at T=1 — step and block are the same
+    recurrence in different float associations, so one-token decode
+    streams stay bit-for-bit what they were."""
+    t = x.shape[1]
     if spec.mixer == "attn":
         if cfg.global_every > 0:
             theta = jnp.where(
@@ -556,29 +533,50 @@ def _mixer_decode(
             )
         else:
             theta = cfg.rope_theta
-        return attn_mod.attention_decode(
+        return attn_mod.attention_chunk(
             bparams["mixer"], x, cache, pos, cfg, theta,
-            window=meta["window"], active=active,
+            window=meta["window"], active=active, lengths=lengths,
+            ring=spec.window > 0, read_to=read_to,
         )
     if spec.mixer == "mla":
-        return attn_mod.mla_decode(
-            bparams["mixer"], x, cache, pos, cfg, active=active
+        return attn_mod.mla_chunk(
+            bparams["mixer"], x, cache, pos, cfg, active=active,
+            lengths=lengths, read_to=read_to,
         )
-    if spec.mixer == "ssm":
-        out = ssm_mod.mamba_decode(bparams["mixer"], x, cache, cfg)
-    elif spec.mixer == "rec":
-        out = rglru_mod.rglru_decode(bparams["mixer"], x, cache, cfg)
-    else:
+    if spec.mixer not in ("ssm", "rec"):
         raise ValueError(spec.mixer)
+    if lengths is not None:
+        raise NotImplementedError(
+            "ragged chunk lengths are attention-family only (recurrent "
+            "state would integrate the pad tail); chunked admission "
+            "prefill gates on _chunked_prefill_safe accordingly"
+        )
+    if t == 1:
+        if spec.mixer == "ssm":
+            out = ssm_mod.mamba_decode(bparams["mixer"], x, cache, cfg)
+        else:
+            out = rglru_mod.rglru_decode(bparams["mixer"], x, cache, cfg)
+    elif spec.mixer == "ssm":
+        y, _, nc = ssm_mod.mamba_block(
+            bparams["mixer"], x, cfg, return_cache=True, cache=cache
+        )
+        out = (y, nc)
+    else:
+        out = rglru_mod.rglru_block(
+            bparams["mixer"], x, cfg, return_cache=True, cache=cache
+        )
     if active is not None:
         out = (out[0], _freeze_inactive(out[1], cache, active))
     return out
 
 
-def _decode_block(bparams, spec, x, cache, pos, cfg, meta, active=None):
+def _chunk_block(
+    bparams, spec, x, cache, pos, cfg, meta, active=None, lengths=None,
+    read_to=None,
+):
     h = rmsnorm(bparams["pre_norm"], x)
-    y, new_cache = _mixer_decode(
-        bparams, spec, h, cache, pos, cfg, meta, active
+    y, new_cache = _mixer_chunk(
+        bparams, spec, h, cache, pos, cfg, meta, active, lengths, read_to
     )
     x = x + y
     if spec.ffn is not None:
@@ -595,11 +593,22 @@ def decode_step(
     params, tokens: Array, caches, pos: Array, cfg: ModelConfig,
     active: Array | None = None,
 ):
-    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (lockstep:
-    every slot at the same write index) or (B,) int32 (per-slot positions,
-    continuous batching).  ``active`` optionally masks cache writes per
-    slot.  Returns (logits (B,1,V), new_caches)."""
-    x = embed(params["embed"], tokens, cfg)
+    """One decode step — :func:`forward_chunk` with T=1.  tokens: (B, 1)
+    int32; pos: scalar int32 (lockstep: every slot at the same write
+    index) or (B,) int32 (per-slot positions, continuous batching).
+    ``active`` optionally masks cache writes per slot.  Returns
+    (logits (B,1,V), new_caches)."""
+    return forward_chunk(params, tokens, caches, pos, cfg, active=active)
+
+
+def _forward_chunk_x(
+    params, x: Array, caches, pos: Array, cfg: ModelConfig,
+    active: Array | None = None, lengths: Array | None = None,
+    read_to: int | None = None,
+):
+    """Segment walk of :func:`_chunk_block` over embedded inputs
+    x (B, T, D).  Returns (hidden (B, T, D), new_caches) — the shared
+    core under ``forward_chunk`` / ``prefill`` / ``decode_step``."""
     segs = build_segments(cfg)
     new_caches = []
     for si, seg in enumerate(segs):
@@ -610,9 +619,9 @@ def decode_step(
             new_seg = {}
             for bi, spec in enumerate(seg.blocks):
                 meta = {k: v[0] for k, v in metas[bi].items()}
-                x, nc = _decode_block(
+                x, nc = _chunk_block(
                     seg_p[f"b{bi}"], spec, x, seg_c[f"b{bi}"], pos, cfg, meta,
-                    active,
+                    active, lengths, read_to,
                 )
                 new_seg[f"b{bi}"] = nc
             new_caches.append(new_seg)
@@ -624,9 +633,9 @@ def decode_step(
                 new_c = {}
                 for bi, spec in enumerate(seg.blocks):
                     meta = {k: v[r] for k, v in metas[bi].items()}
-                    x, nc = _decode_block(
+                    x, nc = _chunk_block(
                         layer_p[f"b{bi}"], spec, x, layer_c[f"b{bi}"], pos,
-                        cfg, meta, active,
+                        cfg, meta, active, lengths, read_to,
                     )
                     new_c[f"b{bi}"] = nc
                 reps.append(new_c)
@@ -637,9 +646,9 @@ def decode_step(
                 bp_all, c_all, meta_all = inp
                 new_c = {}
                 for bi, spec in enumerate(seg.blocks):
-                    x, nc = _decode_block(
+                    x, nc = _chunk_block(
                         bp_all[f"b{bi}"], spec, x, c_all[f"b{bi}"], pos, cfg,
-                        meta_all[f"b{bi}"], active,
+                        meta_all[f"b{bi}"], active, lengths, read_to,
                     )
                     new_c[f"b{bi}"] = nc
                 return x, new_c
@@ -651,16 +660,55 @@ def decode_step(
             )
             x, new_seg = jax.lax.scan(body, x, xs)
             new_caches.append(new_seg)
-    x = rmsnorm(params["final_norm"], x)
+    return x, new_caches
+
+
+def forward_chunk(
+    params, tokens: Array, caches, pos: Array, cfg: ModelConfig,
+    active: Array | None = None, lengths: Array | None = None,
+    logits_at: Array | None = None,
+):
+    """Cache-resident multi-token forward: the single serving code path.
+
+    tokens: (B, T) int32; pos: scalar or (B,) int32 — absolute position
+    of ``tokens[:, 0]`` per slot.  K/V (or recurrent state) for tokens
+    ``t < lengths[b]`` (default: all T) of ``active`` slots extend the
+    *existing* caches — dense ring or paged — and each token attends the
+    already-resident prefix plus its in-chunk causal predecessors.
+
+    * ``prefill``  == forward_chunk from an empty cache (T = prompt len);
+    * ``decode_step`` == forward_chunk with T = 1;
+    * chunked admission prefill == a sequence of forward_chunk slices
+      (``serve.scheduler``), each landing straight in the shared caches.
+
+    ``logits_at``: ``None`` returns logits for every chunk position
+    (B, T, V); a per-slot (B,) chunk-relative index returns only that
+    position's logits (B, V) — what admission prefill reads (the last
+    real prompt token) without unembedding the whole chunk.
+
+    Returns (logits, new_caches).
+    """
+    x = embed(params["embed"], tokens, cfg)
+    x, new_caches = _forward_chunk_x(
+        params, x, caches, pos, cfg, active, lengths
+    )
     head = params.get("lm_head", params["embed"])
-    logits = unembed(head, x, cfg)
-    return logits, new_caches
+    if logits_at is not None:
+        idx = jnp.asarray(logits_at, jnp.int32)[:, None, None]
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1
+        )
+        xl = rmsnorm(params["final_norm"], xl)
+        return unembed(head, xl, cfg)[:, 0], new_caches
+    x = rmsnorm(params["final_norm"], x)
+    return unembed(head, x, cfg), new_caches
 
 
 def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int,
             last_pos: Optional[Array] = None):
-    """Run the full prompt once, producing last-position logits and filled
-    KV caches of length ``cache_len`` (>= prompt length).
+    """Run the full prompt as ONE :func:`forward_chunk` from an empty
+    dense-layout cache: last-position logits plus filled caches of length
+    ``cache_len`` (>= prompt length).
 
     ``last_pos`` (traced scalar) reads the logits at position
     ``last_pos - 1`` instead of the final row — the hook for bucketed
@@ -675,9 +723,11 @@ def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int,
     """
     x = _embed_inputs(params, batch, cfg)
     x = shard_hint(x, "batch", "seq", "act_embed")
-    positions = jnp.arange(x.shape[1])
-    tabs = _rope_tabs(cfg, positions)
-    x, _, caches = _run_segments(params, x, cfg, tabs, cache_len=cache_len)
+    caches, _ = init_cache(cfg, x.shape[0], cache_len, dtype=x.dtype)
+    x, caches = _forward_chunk_x(
+        params, x, caches, jnp.asarray(0, jnp.int32), cfg,
+        read_to=x.shape[1],
+    )
     if last_pos is None:
         xl = x[:, -1:]
     else:

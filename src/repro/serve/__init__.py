@@ -1,19 +1,34 @@
-"""Serving subsystem — three engine tiers over one model stack.
+"""Serving subsystem — three engine tiers over ONE model forward.
+
+Every tier runs the same cache-resident multi-token forward,
+``repro.models.api.forward_chunk``: T tokens per slot at per-slot position
+offsets, K/V written into an *existing* cache (dense ring or paged) under
+a causal mask against the already-resident prefix.  Prefill is
+forward_chunk from an empty cache; a decode step is forward_chunk with
+T=1; chunked admission prefill is a sequence of forward_chunk slices.
+One read path to optimise — the prerequisite the paged-attention kernel
+work builds on.
 
 1. **Python loop** (``repro.train.serve.BatchedServer.generate_python_loop``)
    — one jitted decode + one host sync per token.  Kept as the benchmark
    baseline and the scan-equivalence oracle.
 2. **Compiled lockstep** (:class:`~repro.serve.engine.DecodeEngine`) —
-   prefill + ``lax.scan`` decode + on-device sampling fused into one XLA
-   program; a fixed batch decodes in lockstep, one device->host transfer
-   per ``generate`` (per chunk when streaming, with the stop-token done
-   mask riding the same transfer for early exit).
+   prefill (one forward_chunk) + ``lax.scan`` decode + on-device sampling
+   fused into one XLA program; a fixed batch decodes in lockstep, one
+   device->host transfer per ``generate`` (per chunk when streaming, with
+   the stop-token done mask riding the same transfer for early exit).
 3. **Continuous batching**
    (:class:`~repro.serve.scheduler.ContinuousBatchingEngine`) — the same
    compiled chunked decode, plus a request lifecycle around it: queued
    requests are admitted into slots at chunk boundaries, tracked with
    per-slot positions / PRNG keys / stop masks on device, and evicted the
-   chunk they finish, freeing their KV blocks for the next request.
+   chunk they finish, freeing their KV blocks for the next request.  With
+   ``prefill_chunk`` set, admission runs token-budget **chunked prefill**
+   (Sarathi-style): each engine step spends a bounded slice of at most
+   one admitting prompt alongside the decode chunk, writing straight into
+   the shared caches (``kv_pool.write_span``), so a long prompt no longer
+   freezes every live decode stream — the head-of-line latency the tier
+   exists to remove.
 
 Cache-adapter protocol: decode caches are per-layer dicts in one of two
 interchangeable layouts — dense ``{"k", "v"}`` ring buffers, or paged

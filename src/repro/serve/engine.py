@@ -13,6 +13,12 @@ device->host transfer happens per ``generate`` call (``host_transfers``
 counts them; the engine test asserts the invariant).  ``generate_stream``
 is the chunked variant: one transfer per chunk for incremental delivery.
 
+Prefill and decode are the SAME forward: ``api.prefill`` is
+``forward_chunk`` from an empty cache and ``api.decode_step`` is
+``forward_chunk`` with T=1 (see ``models.transformer``), so this lockstep
+tier, the python-loop baseline and the continuous-batching scheduler all
+run one cache-resident forward implementation.
+
 Logits contract: prefill and decode both surface ``(B, V)`` next-token
 logits (``decode_logits`` normalizes the decode step's ``(B, 1, V)``), so
 sampling never branches on step index.

@@ -95,6 +95,38 @@ def write(
     return pool.at[blk, off].set(val.astype(pool.dtype), mode="drop")
 
 
+def write_span(
+    pool: Array,  # (NB, BS, H, D)
+    table: Array,  # (B, MB) int32
+    pos: Array,  # (B,) int32 — first write position per slot
+    val: Array,  # (B, T, H, D) — T consecutive tokens per slot
+    active: Array | None = None,  # (B,) bool; inactive slots write nothing
+    lengths: Array | None = None,  # (B,) int32; tokens t >= lengths[b] dropped
+) -> Array:
+    """Scatter a span of T tokens per slot into its pages: position
+    ``pos[b] + t`` lands at ``(table[b, (pos[b]+t) // BS], (pos[b]+t) % BS)``.
+
+    This is the multi-token generalisation of :func:`write` that chunked
+    prefill uses — prompt slices land directly in pool pages instead of
+    being prefilled into a dense buffer and installed via
+    :func:`scatter_prefill`.  Masked entries (inactive slot, or ``t >=
+    lengths[b]`` on a ragged final slice) are routed out of bounds and
+    dropped, exactly like :func:`write`'s inactive slots.
+    """
+    bs = pool.shape[1]
+    t = val.shape[1]
+    p = pos[:, None] + jnp.arange(t, dtype=pos.dtype)[None, :]  # (B, T)
+    mb = table.shape[1]
+    blk = jnp.take_along_axis(table, jnp.clip(p // bs, 0, mb - 1), axis=1)
+    ok = p < mb * bs  # masked rows may run past the table; clip + drop
+    if lengths is not None:
+        ok = ok & (jnp.arange(t)[None, :] < lengths[:, None])
+    if active is not None:
+        ok = ok & active[:, None]
+    blk = jnp.where(ok, blk, pool.shape[0])  # OOB -> mode="drop"
+    return pool.at[blk, p % bs].set(val.astype(pool.dtype), mode="drop")
+
+
 def read(pool: Array, table: Array) -> Array:
     """Gather a dense per-slot view: (B, MB * BS, H, D) in position order.
 

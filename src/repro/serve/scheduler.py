@@ -7,15 +7,21 @@ whole batch to drain.  ``ContinuousBatchingEngine`` keeps the same compiled
 decode program (fixed ``num_slots``-wide batch, ``lax.scan`` chunks,
 on-device sampling) but gives every slot its own lifecycle:
 
-* **admission** — a queued request is prefilled batch-1, its KV prefix
-  installed into a free slot (scattered into pool blocks under the paged
-  layout), and its per-slot state (position, PRNG key, budget) written
-  device-side.  Where parity allows (:func:`_bucketed_prefill_safe`) the
-  prompt is right-padded to a power-of-two bucket so one compiled trace
-  serves every length in the bucket; pad positions are causally invisible
-  and their cache slots stay masked until decode overwrites them, so each
-  request's stream is unchanged.  Ring-cache / recurrent / MoE configs
-  fall back to exact-length prefill (one retrace per distinct length).
+* **admission** — with ``prefill_chunk`` set (token-budget chunked
+  prefill, Sarathi-style), a queued request only *occupies* a free slot;
+  its prompt then streams into the shared caches as fixed-size
+  ``forward_chunk`` slices — at most one slice per engine step, written
+  directly into pool pages (``kv_pool.write_span``) or dense rows — so a
+  long prompt stalls the decode cadence for at most one slice at a time.
+  The slice completing the prompt samples the first token with the
+  one-shot key-split order, and ONE program is compiled per (budget,
+  layout) — ragged final slices are padded and masked, never retraced.
+  Configs where slicing would change streams fall back
+  (:func:`_chunked_prefill_safe`) to the one-shot path: batch-1 prefill,
+  KV prefix installed into the slot.  There, where parity allows
+  (:func:`_bucketed_prefill_safe`), the prompt is right-padded to a
+  power-of-two bucket so one compiled trace serves every length in the
+  bucket; remaining configs retrace per distinct length.
 * **decode** — one compiled chunk advances all slots together; per-slot
   positions, EOS/stop-token hits and ``max_new_tokens`` budgets are
   tracked as on-device masks, and finished slots produce **no cache
@@ -25,11 +31,12 @@ on-device sampling) but gives every slot its own lifecycle:
   request is admitted into the hole.
 
 Determinism contract: each request carries its own seed, and admission
-prefill + per-slot key-splitting reproduce ``DecodeEngine``'s exact
-key-split order for a batch-1 call.  A request's token stream is therefore
-identical to ``DecodeEngine.generate(prompt[None], scfg, seed=seed)`` up
-to stop-token truncation — the parity tests assert this bit-for-bit, for
-both the dense and paged cache layouts.
+prefill (one-shot, bucketed or chunked) + per-slot key-splitting reproduce
+``DecodeEngine``'s exact key-split order for a batch-1 call.  A request's
+token stream is therefore identical to
+``DecodeEngine.generate(prompt[None], scfg, seed=seed)`` up to stop-token
+truncation — the parity tests assert this bit-for-bit, for both the dense
+and paged cache layouts, with and without chunked prefill.
 
 Host-transfer hygiene: one fetch of the packed ``(B, chunk+1)`` token
 matrix per decode chunk (the last column is the device's post-chunk active
@@ -41,6 +48,7 @@ them.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -83,7 +91,13 @@ class Request:
 
 @dataclasses.dataclass
 class RequestState:
-    """Host mirror of an admitted request (the device holds the arrays)."""
+    """Host mirror of an admitted request (the device holds the arrays).
+
+    Under chunked prefill a request occupies its slot while its prompt
+    still streams in: ``prefilled`` counts prompt tokens already resident
+    in the cache, and ``n_generated == 0`` marks the slot as admitting
+    (inactive in decode chunks) until the final slice samples the first
+    token."""
 
     request: Request
     slot: int
@@ -91,6 +105,8 @@ class RequestState:
     tokens: list[int]
     n_generated: int
     admitted_at: float
+    prefilled: int = 0
+    first_token_at: float = 0.0
     done: bool = False
     finish_reason: str = ""
 
@@ -108,6 +124,7 @@ class FinishedRequest:
     prompt_len: int
     arrival: float
     admitted_at: float
+    first_token_at: float  # when the first token was sampled (TTFT anchor)
     finished_at: float
 
 
@@ -244,6 +261,62 @@ def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
     return chunk
 
 
+def _make_prefill_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, t: int):
+    """One admission-prefill slice: ``t`` prompt tokens for (at most) one
+    admitting slot, written straight into the BIG cache tree — dense rows
+    or pool pages (``kv_pool.write_span``) — with every other slot masked
+    out.  Because ragged final slices are right-padded to ``t`` and gated
+    by ``lengths``, ONE compiled program serves every prompt length: the
+    trace count is per (budget, layout), not per prompt.
+
+    Sampling reproduces ``_prefill_sample``'s key-split order on the
+    admitting slot's row (split after prefill, batch-1 sampler), so the
+    first token — and with it the whole stream — is bit-for-bit the
+    lockstep engine's.  The sampled token and split key are computed every
+    slice but only the slice that completes the prompt is read back by the
+    host (one scalar fetch per admission, same budget as one-shot
+    admission).
+    """
+
+    def pchunk(params, caches, tokens, pos, active, lengths, slot, key):
+        assert tokens.shape[1] == t, "slices must be padded to the budget"
+        logits, caches = api.forward_chunk(
+            params, tokens, caches, pos, cfg, active=active, lengths=lengths,
+            logits_at=jnp.maximum(lengths - 1, 0),
+        )
+        row = jnp.take(logits, slot, axis=0)
+        key, sub = jax.random.split(key)
+        tok0 = sample_token(sub, row[None], scfg)[0]
+        return tok0, caches, key
+
+    return pchunk
+
+
+def _chunked_prefill_safe(cfg: ModelConfig) -> bool:
+    """Whether admission prefill may be split into fixed-budget slices
+    without changing any request's stream.
+
+    Safe exactly when slicing a prompt across ``forward_chunk`` calls is
+    invisible: attention mixers (incl. ring-cache sliding-window layers —
+    their in-chunk path is already sequential per token, so slice
+    boundaries change nothing).  Unsafe, falling back to one-shot
+    admission prefill:
+
+    * ssm / rec mixers: the chunk recurrences (SSD chunking, associative
+      scan) re-associate float accumulation across slice boundaries;
+    * MoE / routed 8-bit branches: Switch-style capacity couples the
+      tokens of a slice, so slice size changes real tokens' routing;
+    * VLM image prefixes (position offsets are caller-managed).
+    """
+    if cfg.moe or cfg.quant.num_experts > 1 or cfg.n_image_tokens > 0:
+        return False
+    for seg in build_segments(cfg):
+        for spec in seg.blocks:
+            if spec.mixer not in ("attn", "mla"):
+                return False
+    return True
+
+
 def _bucketed_prefill_safe(cfg: ModelConfig, max_len: int) -> bool:
     """Whether admission prefill may right-pad prompts to a shared bucket
     length without changing any request's stream.
@@ -311,6 +384,17 @@ class ContinuousBatchingEngine:
         long requests at once; if blocks run out mid-flight the youngest
         request is preempted back to the queue (restart-from-scratch is
         deterministic, so its stream is unchanged).
+    prefill_chunk : token budget per engine step for admission prefill
+        (Sarathi-style chunked prefill).  ``None`` (default) admits with
+        one-shot prefill; an int splits each admitting prompt into
+        fixed-size ``forward_chunk`` slices written straight into the
+        shared caches (``kv_pool.write_span`` under the paged layout), at
+        most one slice per step, so a long prompt never stalls the decode
+        cadence for more than one slice.  ONE program is compiled per
+        (budget, layout) — slices are padded+masked, never retraced per
+        prompt length.  Configs where slicing would change streams
+        (recurrent mixers, MoE/routed branches, VLM prefixes — see
+        :func:`_chunked_prefill_safe`) fall back to one-shot admission.
     clock : optional callable returning the current time in seconds; by
         default a virtual clock advances one tick per decode chunk and
         ``Request.arrival`` is in ticks.
@@ -328,6 +412,7 @@ class ContinuousBatchingEngine:
         block_size: int = 16,
         num_blocks: Optional[int] = None,
         chunk: int = 8,
+        prefill_chunk: Optional[int] = None,
         clock: Optional[Callable[[], float]] = None,
     ):
         if cfg.family == "encdec":
@@ -367,9 +452,26 @@ class ContinuousBatchingEngine:
             "budget": jnp.zeros((b,), jnp.int32),
         }
 
-        # exact-length prefill retraces per prompt length; where parity
-        # allows it (_bucketed_prefill_safe), admission right-pads prompts
-        # to power-of-two buckets so one trace covers a whole bucket
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        # chunked admission prefill: fixed-budget forward_chunk slices into
+        # the big caches, one compiled program per (budget, layout).
+        # Stream-unsafe configs fall back to one-shot admission below.
+        self.prefill_chunk = (
+            prefill_chunk if (prefill_chunk is not None
+                              and _chunked_prefill_safe(cfg)) else None
+        )
+        self._prefill_chunk = (
+            jax.jit(
+                _make_prefill_chunk_fn(cfg, self.scfg, self.prefill_chunk),
+                donate_argnums=(1,),
+            )
+            if self.prefill_chunk is not None else None
+        )
+        # one-shot admission: exact-length prefill retraces per prompt
+        # length; where parity allows it (_bucketed_prefill_safe),
+        # admission right-pads prompts to power-of-two buckets so one
+        # trace covers a whole bucket
         self._prefill = jax.jit(
             _make_prefill_fn(cfg, max_len, self.scfg)
         )
@@ -490,12 +592,21 @@ class ContinuousBatchingEngine:
         return finished
 
     def step(self) -> list[FinishedRequest]:
-        """One scheduling tick: admit arrived requests, ensure pool blocks
-        for the coming chunk, run one compiled decode chunk, evict finished
-        requests.  Returns the requests that finished this tick."""
+        """One scheduling tick, spending one token budget: admit arrived
+        requests, advance at most one admitting prompt by one prefill
+        slice (chunked prefill), ensure pool blocks for the coming chunk,
+        run one compiled decode chunk for the decoding slots, evict
+        finished requests.  Returns the requests that finished this
+        tick."""
         finished = list(self._admit_arrived())
-        if not self._live():
-            if self._queue:
+        finished.extend(self._prefill_tick())
+        if not any(rs.n_generated > 0 for rs in self._live()):
+            if self._live():
+                # every occupied slot is still admitting: the slice above
+                # was this tick's work
+                if self._clock is None:
+                    self._now += 1.0
+            elif self._queue:
                 self._advance_clock()
             return finished
         if self.allocator is not None:
@@ -518,15 +629,15 @@ class ContinuousBatchingEngine:
         if self._clock is None:
             self._now = max(self._now, float(nxt))
         else:
-            import time
-
             time.sleep(max(0.0, min(nxt - self.now(), 0.05)))
 
     def _admit_arrived(self) -> list[FinishedRequest]:
         """FIFO-admit every arrived request that fits a free slot (and, if
-        paged, whose prompt blocks are available).  Requests whose first
-        token already finishes them (budget 1 / instant stop) complete
-        here and never occupy a slot."""
+        paged, whose prompt blocks are available).  With chunked prefill
+        the slot is only *occupied* here — the prompt streams in via
+        :meth:`_prefill_tick` slices.  On the one-shot path, requests
+        whose first token already finishes them (budget 1 / instant stop)
+        complete here and never occupy a slot."""
         finished = []
         while True:
             free = [i for i, rs in enumerate(self._slots) if rs is None]
@@ -544,10 +655,102 @@ class ContinuousBatchingEngine:
                     break  # pool full: wait for evictions, don't preempt
                 blocks = got
             self._queue.remove(req)
-            done = self._admit(req, free[0], blocks)
-            if done is not None:
-                finished.append(done)
+            if self.prefill_chunk is not None:
+                self._admit_chunked(req, free[0], blocks)
+            else:
+                done = self._admit(req, free[0], blocks)
+                if done is not None:
+                    finished.append(done)
         return finished
+
+    def _admit_chunked(self, req: Request, slot: int, blocks: list[int]):
+        """Occupy a slot without running prefill: install the slot's block
+        table (paged) and let :meth:`_prefill_tick` stream the prompt in.
+        The slot stays inactive in decode chunks until the final slice
+        samples its first token."""
+        if blocks:
+            self._caches = self._set_tables(
+                self._caches, jnp.asarray(slot), self._table_row(blocks)
+            )
+        self._slots[slot] = RequestState(
+            request=req, slot=slot, blocks=blocks, tokens=[],
+            n_generated=0, admitted_at=self.now(), prefilled=0,
+        )
+
+    def _prefill_tick(self) -> list[FinishedRequest]:
+        """Advance at most ONE admitting request's prompt by one
+        fixed-size ``forward_chunk`` slice, straight into the big caches.
+        The decode cadence therefore pays for at most ``prefill_chunk``
+        prompt tokens per engine step, however long the prompt.
+
+        The slice that completes the prompt samples the first token with
+        the one-shot path's exact key-split order, finishing admission
+        (or, for instant-stop / budget-1 requests, the whole request)."""
+        if self.prefill_chunk is None:
+            return []
+        pending = [
+            rs for rs in self._live()
+            if rs.prefilled < len(rs.request.prompt)
+        ]
+        if not pending:
+            return []
+        rs = min(pending, key=lambda r: (r.admitted_at, r.slot))
+        t = self.prefill_chunk
+        req = rs.request
+        s = len(req.prompt)
+        n = min(t, s - rs.prefilled)
+        b = self.num_slots
+        toks = np.zeros((b, t), np.int32)
+        toks[rs.slot, :n] = req.prompt[rs.prefilled : rs.prefilled + n]
+        pos = np.zeros((b,), np.int32)
+        pos[rs.slot] = rs.prefilled
+        active = np.zeros((b,), bool)
+        active[rs.slot] = True
+        lengths = np.zeros((b,), np.int32)
+        lengths[rs.slot] = n
+        tok_d, self._caches, key_d = self._prefill_chunk(
+            self.params, self._caches, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(active), jnp.asarray(lengths),
+            jnp.asarray(rs.slot, jnp.int32), jax.random.PRNGKey(req.seed),
+        )
+        rs.prefilled += n
+        if rs.prefilled < s:
+            return []
+        tok0 = int(self._fetch(tok_d))  # one scalar per admission
+        now = self.now()
+        done = self._finish_at_admission(req, tok0, rs.blocks,
+                                         rs.admitted_at)
+        if done is not None:
+            self._slots[rs.slot] = None
+            return [done]
+        self._state = self._admit_jit(
+            self._state, jnp.asarray(rs.slot), tok_d, key_d,
+            jnp.asarray(s, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+        )
+        rs.tokens = [tok0]
+        rs.n_generated = 1
+        rs.first_token_at = now
+        return []
+
+    def _finish_at_admission(
+        self, req: Request, tok0: int, blocks: list[int], admitted_at: float
+    ) -> Optional[FinishedRequest]:
+        """The first sampled token already finishes the request (stop hit
+        or budget 1): free its blocks and emit the FinishedRequest.  The
+        single definition of finish-at-admission semantics, shared by
+        one-shot (:meth:`_admit`) and chunked (:meth:`_prefill_tick`)
+        admission.  Returns None if the request lives on."""
+        if tok0 not in self._stop_set and req.max_new_tokens != 1:
+            return None
+        reason = "stop" if tok0 in self._stop_set else "length"
+        if blocks:
+            self.allocator.free(blocks)
+        now = self.now()
+        return FinishedRequest(
+            req.uid, np.asarray([tok0], np.int32), reason, len(req.prompt),
+            req.arrival, admitted_at, now, now,
+        )
 
     def _bucket_len(self, s: int) -> int:
         """Smallest power of two >= s, capped at the slot capacity."""
@@ -582,14 +785,9 @@ class ContinuousBatchingEngine:
         tok0_d, small, pos0, key = self._admission_prefill(req)
         tok0 = int(self._fetch(tok0_d)[0])  # one scalar per admission
         now = self.now()
-        if tok0 in self._stop_set or req.max_new_tokens == 1:
-            reason = "stop" if tok0 in self._stop_set else "length"
-            if blocks:
-                self.allocator.free(blocks)
-            return FinishedRequest(
-                req.uid, np.asarray([tok0], np.int32), reason,
-                len(req.prompt), req.arrival, now, now,
-            )
+        done = self._finish_at_admission(req, tok0, blocks, now)
+        if done is not None:
+            return done
         table_row = self._table_row(blocks)
         nb = len(blocks)
         if nb not in self._install_fns:
@@ -605,7 +803,8 @@ class ContinuousBatchingEngine:
         )
         self._slots[slot] = RequestState(
             request=req, slot=slot, blocks=blocks, tokens=[tok0],
-            n_generated=1, admitted_at=now,
+            n_generated=1, admitted_at=now, prefilled=len(req.prompt),
+            first_token_at=now,
         )
         return None
 
@@ -620,6 +819,8 @@ class ContinuousBatchingEngine:
         for rs in sorted(self._live(), key=lambda r: r.admitted_at):
             if self._slots[rs.slot] is not rs:
                 continue  # preempted by an earlier iteration of this loop
+            if rs.n_generated == 0:
+                continue  # still admitting: blocks already cover the prompt
             total_cap = len(rs.request.prompt) + rs.request.max_new_tokens
             need = kv_pool.blocks_for(
                 min(rs.pos + self.chunk, total_cap), self.block_size
@@ -677,8 +878,8 @@ class ContinuousBatchingEngine:
         steps = packed.shape[1] - 1
         for step in range(steps):
             for rs in self._live():
-                if rs.done:
-                    continue
+                if rs.done or rs.n_generated == 0:
+                    continue  # finished, or still admitting (no decode)
                 tok = int(packed[rs.slot, step])
                 rs.tokens.append(tok)
                 rs.n_generated += 1
@@ -690,7 +891,8 @@ class ContinuousBatchingEngine:
         finished = []
         now = self.now()
         for rs in self._live():
-            if bool(device_active[rs.slot]) != (not rs.done):
+            expect_active = (not rs.done) and rs.n_generated > 0
+            if bool(device_active[rs.slot]) != expect_active:
                 raise AssertionError(
                     f"slot {rs.slot}: device active mask disagrees with "
                     "the host lifecycle mirror"
@@ -705,7 +907,7 @@ class ContinuousBatchingEngine:
                 FinishedRequest(
                     req.uid, np.asarray(rs.tokens, np.int32),
                     rs.finish_reason, len(req.prompt), req.arrival,
-                    rs.admitted_at, now,
+                    rs.admitted_at, rs.first_token_at, now,
                 )
             )
         return finished

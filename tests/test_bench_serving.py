@@ -15,16 +15,50 @@ def test_bench_serving_smoke(capsys):
     names = [r.split(",")[0] for r in rows]
     assert "serving/lockstep" in names
     assert "serving/continuous" in names
+    assert "serving/continuous_chunked" in names
     assert "serving/pool" in names
     by_name = dict(zip(names, rows))
-    # both paths report tokens/sec and latency percentiles
-    for name in ("serving/lockstep", "serving/continuous"):
+    # every serving tier reports tokens/sec, latency percentiles, TTFT
+    # percentiles and inter-token p95 (the chunked-prefill story)
+    for name in ("serving/lockstep", "serving/continuous",
+                 "serving/continuous_chunked"):
         assert "tok_s=" in by_name[name]
         assert "p50_ms=" in by_name[name] and "p95_ms=" in by_name[name]
+        assert "ttft_p50_ms=" in by_name[name]
+        assert "ttft_p95_ms=" in by_name[name]
+        assert "itl_p95_ms=" in by_name[name]
+    assert "prefill_chunk=" in by_name["serving/continuous_chunked"]
+    assert "itl_p95_vs_continuous=" in by_name["serving/continuous_chunked"]
     # the paged pool leaks no blocks over the trace
     derived = by_name["serving/pool"].split(",", 2)[2]
     fields = dict(kv.split("=") for kv in derived.split(";"))
     assert fields["blocks"] == fields["free"]
+
+
+def test_run_py_writes_serving_artifact(tmp_path, monkeypatch):
+    """`benchmarks/run.py --smoke` writes the BENCH_serving.json artifact
+    CI uploads — the per-PR perf trajectory record."""
+    import json
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(PYTHONPATH=str(root / "src"), PATH="/usr/bin:/bin",
+               HOME=str(tmp_path))
+    out = tmp_path / "BENCH_serving.json"
+    # --only memory keeps it seconds-scale: the artifact plumbing is what
+    # is under test, not the serving numbers
+    r = subprocess.run(
+        [sys.executable, str(root / "benchmarks" / "run.py"), "--smoke",
+         "--only", "memory", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    payload = json.loads(out.read_text())
+    assert payload["smoke"] is True
+    # the numbers survive — dict-returning suites keep their structure
+    mem = payload["suites"]["memory"]["rows"]
+    assert isinstance(mem, dict) and mem["300m"], mem
 
 
 def test_trace_is_deterministic_per_seed():

@@ -57,14 +57,21 @@ def want(reference):
     }
 
 
+@pytest.mark.parametrize("prefill_chunk", [None, 3])
 @pytest.mark.parametrize("layout", ["dense", "paged"])
-def test_per_request_parity_with_lockstep_engine(params, want, layout):
+def test_per_request_parity_with_lockstep_engine(params, want, layout,
+                                                 prefill_chunk):
     """Acceptance: identical token stream per prompt/seed, ragged prompts,
-    fewer slots than requests, both cache layouts."""
+    fewer slots than requests, both cache layouts — with one-shot AND
+    token-budget chunked admission prefill (prompts of length 5 and 7 span
+    multiple 3-token slices).  Chunked prefill also compiles exactly ONE
+    program per (budget, layout): slice padding + masking absorb every
+    prompt length."""
     eng = ContinuousBatchingEngine(
         params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
-        layout=layout, block_size=8, chunk=4,
+        layout=layout, block_size=8, chunk=4, prefill_chunk=prefill_chunk,
     )
+    assert eng.prefill_chunk == prefill_chunk  # CFG is chunk-safe
     for uid, n in PROMPTS.items():
         eng.submit(_prompt(uid + 10, n), max_new_tokens=6, seed=uid, uid=uid)
     finished = eng.run()
@@ -72,6 +79,10 @@ def test_per_request_parity_with_lockstep_engine(params, want, layout):
     for f in finished:
         np.testing.assert_array_equal(f.tokens, want[f.uid])
         assert f.finish_reason == "length"
+        assert f.first_token_at >= f.admitted_at
+    if prefill_chunk is not None:
+        # one trace per (budget, layout), NOT per prompt length
+        assert eng._prefill_chunk._cache_size() == 1
 
 
 def test_paged_matches_dense_bit_for_bit(params):
@@ -90,20 +101,27 @@ def test_paged_matches_dense_bit_for_bit(params):
         np.testing.assert_array_equal(outs["dense"][uid], outs["paged"][uid])
 
 
-def test_parity_sliding_window_global_mix():
+@pytest.mark.parametrize("prefill_chunk", [None, 4])
+def test_parity_sliding_window_global_mix(prefill_chunk):
     """Stacked scan segments with ring caches (sliding window) next to
-    paged global layers — the ring semantics must survive per-slot pos."""
+    paged global layers — the ring semantics must survive per-slot pos,
+    and chunked prefill (which the old bucketing could NOT serve: the ring
+    would fold pad tokens into the window) must reproduce the streams via
+    its sequential in-chunk ring path (prompt 9 spans three slices and
+    wraps the window-4 rings)."""
     params, _ = api.init_model(KEY, SWA_CFG)
     ref = DecodeEngine(params, SWA_CFG, 24)
     scfg = SamplerConfig(temperature=0.7, top_k=10, max_new_tokens=8)
     eng = ContinuousBatchingEngine(
         params, SWA_CFG, num_slots=2, max_len=24, scfg=scfg,
-        layout="paged", block_size=8, chunk=3,
+        layout="paged", block_size=8, chunk=3, prefill_chunk=prefill_chunk,
     )
-    lens = {0: 6, 1: 4}
+    assert eng.prefill_chunk == prefill_chunk  # ring configs ARE chunk-safe
+    lens = {0: 6, 1: 4, 2: 9}
     for uid, n in lens.items():
         eng.submit(_prompt(uid, n), max_new_tokens=8, seed=uid, uid=uid)
     finished = eng.run()
+    assert sorted(f.uid for f in finished) == sorted(lens)
     for f in finished:
         expect = ref.generate(
             jnp.asarray(_prompt(f.uid, lens[f.uid])[None]), scfg, seed=f.uid
@@ -160,14 +178,16 @@ def test_stop_token_truncation(params, reference):
     assert eng.allocator.free_count == eng.num_blocks
 
 
-def test_no_leaked_blocks_after_full_trace(params):
+@pytest.mark.parametrize("prefill_chunk", [None, 3])
+def test_no_leaked_blocks_after_full_trace(params, prefill_chunk):
     """Reclamation accounting: a constrained pool forces waiting +
-    preemption, and after the trace every block is back on the free
-    list."""
+    preemption (under chunked prefill possibly of a mid-prefill victim),
+    and after the trace every block is back on the free list."""
     scfg = SamplerConfig(temperature=0.7, top_k=10, max_new_tokens=12)
     eng = ContinuousBatchingEngine(
         params, CFG, num_slots=2, max_len=MAX_LEN, scfg=scfg,
         layout="paged", block_size=8, num_blocks=4, chunk=4,
+        prefill_chunk=prefill_chunk,
     )
     ref = DecodeEngine(params, CFG, MAX_LEN)
     lens = {0: 7, 1: 3, 2: 5}
@@ -182,6 +202,39 @@ def test_no_leaked_blocks_after_full_trace(params):
         )[0]
         np.testing.assert_array_equal(f.tokens, expect)
     assert eng.allocator.free_count == eng.num_blocks
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_chunked_preemption_mid_prefill_restarts_deterministically(
+    params, want, layout
+):
+    """Preempting a victim while its prompt is still spanning prefill
+    chunks discards the partial prefix; re-admission restarts the chunked
+    prefill from scratch, so the stream is unchanged — in both cache
+    layouts (the paged pool additionally reclaims the partial prompt's
+    blocks)."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+        layout=layout, block_size=8, chunk=4, prefill_chunk=3,
+    )
+    # uid 2's prompt (7 tokens) needs three 3-token slices
+    for uid in (2, 0):
+        eng.submit(_prompt(uid + 10, PROMPTS[uid]), max_new_tokens=6,
+                   seed=uid, uid=uid)
+    eng.step()  # admits both; exactly one slice of uid 2 has landed
+    victim = next(
+        rs for rs in eng._live()
+        if 0 < rs.prefilled < len(rs.request.prompt)
+    )
+    assert victim.request.uid == 2 and victim.n_generated == 0
+    eng._preempt(victim)
+    finished = eng.run()
+    assert eng.preemptions == 1
+    assert sorted(f.uid for f in finished) == [0, 2]
+    for f in finished:
+        np.testing.assert_array_equal(f.tokens, want[f.uid])
+    if layout == "paged":
+        assert eng.allocator.free_count == eng.num_blocks
 
 
 def test_immediate_finish_budget_one(params, reference):
@@ -335,3 +388,50 @@ def test_bucketing_disabled_where_parity_unsafe():
                       quant=QC, moe=True, n_routed_experts=2, moe_top_k=1,
                       d_ff_expert=16, first_k_dense=1)
     assert not _bucketed_prefill_safe(moe, MAX_LEN)
+
+
+def test_chunked_prefill_gating_and_fallback(params):
+    """Chunked prefill covers every attention-family config INCLUDING
+    ring-cache sliding windows (its in-chunk ring path is sequential, so
+    slice boundaries change nothing) — wider than bucketing.  Recurrent
+    and MoE configs fall back to one-shot admission: slicing would
+    re-associate their recurrences / change routing capacity."""
+    from repro.serve.scheduler import _chunked_prefill_safe
+
+    assert _chunked_prefill_safe(CFG)
+    assert _chunked_prefill_safe(SWA_CFG)  # ring-safe (unlike bucketing)
+    moe = ModelConfig(name="m", family="decoder", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=48, vocab_size=64,
+                      quant=QC, moe=True, n_routed_experts=2, moe_top_k=1,
+                      d_ff_expert=16, first_k_dense=1)
+    ssm = ModelConfig(name="s", family="ssm", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=64,
+                      quant=QC, ssm_state=8, ssm_headdim=8, ssm_chunk=4,
+                      glu=False)
+    assert not _chunked_prefill_safe(moe)
+    assert not _chunked_prefill_safe(ssm)
+    # requesting chunked prefill on an unsafe config falls back cleanly
+    sparams, _ = api.init_model(KEY, ssm)
+    eng = ContinuousBatchingEngine(
+        sparams, ssm, num_slots=1, max_len=16, scfg=SCFG, layout="dense",
+        chunk=2, prefill_chunk=4,
+    )
+    assert eng.prefill_chunk is None and eng._prefill_chunk is None
+
+
+def test_chunked_prefill_budget_one_finishes_at_final_slice(params,
+                                                           reference):
+    """budget=1 under chunked prefill: the final slice's sampled token
+    finishes the request; the slot and its blocks free immediately."""
+    scfg = SamplerConfig(temperature=0.0, max_new_tokens=1)
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=1, max_len=MAX_LEN, scfg=scfg,
+        layout="paged", block_size=8, chunk=4, prefill_chunk=2,
+    )
+    prompt = _prompt(7, 5)
+    eng.submit(prompt, max_new_tokens=1, seed=0, uid=0)
+    (f,) = eng.run()
+    expect = reference.generate(jnp.asarray(prompt[None]), scfg, seed=0)[0]
+    np.testing.assert_array_equal(f.tokens, expect)
+    assert eng.allocator.free_count == eng.num_blocks
+    assert all(rs is None for rs in eng._slots)

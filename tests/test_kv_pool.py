@@ -84,6 +84,54 @@ class TestPagedReadWrite:
         got = np.asarray(kv_pool.read(pool, table))[0, :L]
         np.testing.assert_array_equal(got, np.asarray(dense))
 
+    def test_write_span_matches_token_loop(self):
+        """The multi-token span scatter is elementwise the per-token
+        ``write`` loop — chunked prefill's pages are bit-identical to what
+        one-shot install would have produced."""
+        pool, table = self._pool_and_table()
+        t = 6  # crosses a page boundary (BS=4) at different offsets/slot
+        pos = jnp.asarray([1, 3], jnp.int32)
+        val = jax.random.normal(jax.random.PRNGKey(7), (self.B, t, self.H, self.D))
+        got = kv_pool.write_span(pool, table, pos, val)
+        want = pool
+        for i in range(t):
+            want = kv_pool.write(want, table, pos + i, val[:, i], None)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_write_span_masks_lengths_and_active(self):
+        """Ragged final slices (``lengths``) and inactive slots write
+        nothing — the pad tail of a chunked-prefill slice can never
+        scribble into someone else's reclaimed page."""
+        pool, table = self._pool_and_table()
+        t = 4
+        val = jnp.ones((self.B, t, self.H, self.D))
+        got = kv_pool.write_span(
+            pool, table, jnp.zeros((self.B,), jnp.int32), val,
+            jnp.asarray([True, False]), jnp.asarray([2, 4], jnp.int32),
+        )
+        dense = np.asarray(kv_pool.read(got, table))
+        assert (dense[0, :2] == 1.0).all()
+        assert (dense[0, 2:] == 0.0).all()  # beyond lengths[0]
+        assert (dense[1] == 0.0).all()  # inactive slot untouched
+
+    def test_write_span_drops_positions_past_table(self):
+        """Masked entries may run past the slot's table (padded slice at
+        the end of a full slot): they are clipped + dropped, not wrapped
+        into another slot's pages."""
+        pool, table = self._pool_and_table()
+        cap = self.MB * self.BS
+        t = 3
+        val = jnp.ones((self.B, t, self.H, self.D))
+        got = kv_pool.write_span(
+            pool, table, jnp.full((self.B,), cap - 1, jnp.int32), val,
+            None, jnp.asarray([1, 1], jnp.int32),
+        )
+        dense = np.array(kv_pool.read(got, table))
+        assert (dense[:, cap - 1] == 1.0).all()
+        assert (np.asarray(got)[0] == 0.0).all()  # block 0 never touched
+        dense[:, cap - 1] = 0.0
+        assert (dense == 0.0).all()
+
     def test_blocks_for(self):
         assert kv_pool.blocks_for(1, 4) == 1
         assert kv_pool.blocks_for(4, 4) == 1

@@ -136,18 +136,23 @@ def test_decode_logits_parity_teacher_forced(dense_params):
     assert max(errs) < 1e-3, errs
 
 
+@pytest.mark.parametrize("prefill_chunk", [None, 3])
 @pytest.mark.parametrize("layout", ["dense", "paged"])
-def test_continuous_batching_packed_parity(dense_params, layout):
+def test_continuous_batching_packed_parity(dense_params, layout,
+                                           prefill_chunk):
     """Every request's stream on the packed model is bit-for-bit the packed
-    DecodeEngine's batch-1 stream, in both cache layouts — the engine-tier
-    self-consistency half of the acceptance criterion."""
+    DecodeEngine's batch-1 stream, in both cache layouts AND under chunked
+    admission prefill (multi-token forward_chunk slices, incl. a ragged
+    masked final slice, through the W1A8 prefill-tier kernels) — the
+    engine-tier self-consistency half of the acceptance criterion."""
     _, qparams = dense_params
     scfg = SamplerConfig(temperature=0.7, top_k=10, max_new_tokens=5)
     ref = DecodeEngine(qparams, CFG, MAX_LEN)
     eng = ContinuousBatchingEngine(
         qparams, CFG, num_slots=2, max_len=MAX_LEN, scfg=scfg,
-        layout=layout, block_size=8, chunk=4,
+        layout=layout, block_size=8, chunk=4, prefill_chunk=prefill_chunk,
     )
+    assert eng.prefill_chunk == prefill_chunk
     prompts = {0: 5, 1: 3, 2: 6}
     for uid, n in prompts.items():
         eng.submit(np.asarray(_prompt(uid + 20, n)[0]), max_new_tokens=5,
