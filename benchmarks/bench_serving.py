@@ -22,6 +22,18 @@ Rows (``name,us_per_call,derived`` — us_per_call is p50 request latency):
                         (interpret mode on CPU: a wiring check there, a
                         bandwidth story on TPU)
   serving/pool          paged-pool accounting for the continuous run
+  serving/paged_long_gather   long-context Poisson trace (every prompt is
+                        the long one) on the continuous+chunked engine
+                        with the gather+SDPA read path (REPRO_PAGED_ATTN=0)
+  serving/paged_long_kernel   the same trace with the Pallas block-table
+                        paged-attention kernel (REPRO_PAGED_ATTN=1); its
+                        derived column carries decode tok/s for BOTH paths
+                        plus their ratio — the long-context read-path
+                        comparison ``BENCH_serving.json`` tracks per run
+                        (interpret mode on CPU: a wiring/parity check
+                        there — the kernel-beats-gather claim is a TPU
+                        statement, the CPU interpreter is expected to
+                        lose)
 
 Every serving row carries tok_s (useful tokens over the trace makespan),
 request-latency p50/p95, TTFT (time-to-first-token) p50/p95 and p95
@@ -110,6 +122,8 @@ def _run_lockstep(server, trace, num_slots, scfg, t0, pad_to):
 
 
 def _run_continuous(engine, trace, t0):
+    """Returns (lat, ttft, itl, done_tokens, span, finished) — finished is
+    the FinishedRequest list, for callers that derive extra stats."""
     for r in trace:
         engine.submit(
             r["prompt"], max_new_tokens=r["budget"], seed=r["seed"],
@@ -123,7 +137,48 @@ def _run_continuous(engine, trace, t0):
         for f in fin
     ]
     done_tokens = sum(len(f.tokens) for f in fin)
-    return lat, ttft, itl, done_tokens, time.perf_counter() - t0
+    return lat, ttft, itl, done_tokens, time.perf_counter() - t0, fin
+
+
+def _decode_tok_s(fin) -> float:
+    """Decode-phase throughput: post-first tokens over the decode span
+    (first token sampled -> trace drained) — the number the paged read
+    path moves, prefill excluded."""
+    toks = sum(max(0, len(f.tokens) - 1) for f in fin)
+    span = max(f.finished_at for f in fin) - min(f.first_token_at for f in fin)
+    return toks / max(span, 1e-9)
+
+
+def _run_long_context(params, cfg, num_slots, scfg, trace, block, chunk,
+                      prefill_chunk, max_len, clock_box, enabled: bool):
+    """One long-context run with the paged-attention kernel forced on or
+    off (fresh engine per setting: the dispatch decision is baked into the
+    engine's compiled programs at trace time).  Returns (stats, fin)."""
+    import os
+
+    from repro.serve.scheduler import ContinuousBatchingEngine
+
+    prev = os.environ.get("REPRO_PAGED_ATTN")
+    os.environ["REPRO_PAGED_ATTN"] = "1" if enabled else "0"
+    try:
+        clock = lambda: time.perf_counter() - clock_box["t0"]  # noqa: E731
+        eng = ContinuousBatchingEngine(
+            params, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,
+            layout="paged", block_size=block, chunk=chunk,
+            prefill_chunk=prefill_chunk, clock=clock,
+        )
+        clock_box["t0"] = time.perf_counter()
+        _run_continuous(eng, [dict(r, arrival=0.0) for r in trace],
+                        clock_box["t0"])  # warm the compiled programs
+        clock_box["t0"] = t0 = time.perf_counter()
+        lat, ttft, itl, toks, span, fin = _run_continuous(eng, trace, t0)
+        return dict(lat=lat, ttft=ttft, itl=itl,
+                    tok_s=toks / span, decode_tok_s=_decode_tok_s(fin)), fin
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_PAGED_ATTN", None)
+        else:
+            os.environ["REPRO_PAGED_ATTN"] = prev
 
 
 def run(smoke: bool = False, num_slots: int | None = None,
@@ -183,7 +238,7 @@ def run(smoke: bool = False, num_slots: int | None = None,
     ))
 
     box["t0"] = t0 = time.perf_counter()
-    clat, cttft, citl, ctoks, cspan = _run_continuous(eng, trace, t0)
+    clat, cttft, citl, ctoks, cspan, _ = _run_continuous(eng, trace, t0)
     rows.append(row(
         "serving/continuous", _pctl(clat, 50) * 1e3,
         f"tok_s={ctoks / cspan:.1f};"
@@ -205,7 +260,7 @@ def run(smoke: bool = False, num_slots: int | None = None,
     box["t0"] = time.perf_counter()
     _run_continuous(ceng, [dict(r, arrival=0.0) for r in warm], box["t0"])
     box["t0"] = t0 = time.perf_counter()
-    klat, kttft, kitl, ktoks, kspan = _run_continuous(ceng, trace, t0)
+    klat, kttft, kitl, ktoks, kspan, _ = _run_continuous(ceng, trace, t0)
     rows.append(row(
         "serving/continuous_chunked", _pctl(klat, 50) * 1e3,
         f"tok_s={ktoks / kspan:.1f};"
@@ -225,12 +280,62 @@ def run(smoke: bool = False, num_slots: int | None = None,
     box["t0"] = time.perf_counter()
     _run_continuous(peng, [dict(r, arrival=0.0) for r in warm], box["t0"])
     box["t0"] = t0 = time.perf_counter()
-    plat, pttft, pitl, ptoks, pspan = _run_continuous(peng, trace, t0)
+    plat, pttft, pitl, ptoks, pspan, _ = _run_continuous(peng, trace, t0)
     rows.append(row(
         "serving/continuous_packed", _pctl(plat, 50) * 1e3,
         f"tok_s={ptoks / pspan:.1f};"
         + _latency_fields(plat, pttft, pitl)
         + f";vs_fakequant_tok_s={ctoks / cspan:.1f}",
+    ))
+
+    # -- long-context: paged-attention kernel vs gather+SDPA read path ----
+    # every prompt in this trace is long, so the paged read dominates;
+    # block_size 8 satisfies the kernel's support gate (the main trace's
+    # block=4 deliberately exercises the fallback)
+    del peng
+    long_block = 8
+    long_prompt = 40 if smoke else 192
+    long_budget = 8 if smoke else 24
+    long_n = 3 if smoke else 12
+    long_max = long_prompt + long_budget
+    long_max += (-long_max) % long_block
+    long_scfg = SamplerConfig(temperature=0.0, top_k=0,
+                              max_new_tokens=long_budget)
+    ltrace = make_trace(long_n, seed + 1, 0.02 if smoke else 0.05,
+                        (long_prompt,), (long_budget,))
+    long_slots = min(2, num_slots)
+    box = {"t0": time.perf_counter()}
+    stats, fins = {}, {}
+    for name, enabled in (("gather", False), ("kernel", True)):
+        stats[name], fins[name] = _run_long_context(
+            params, cfg, long_slots, long_scfg, ltrace, long_block, chunk,
+            prefill_chunk, long_max, box, enabled,
+        )
+    # greedy sampling: both read paths should produce identical streams
+    # (array_equal, not ==, so a length divergence reads as 0, not a crash)
+    streams_match = all(
+        np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(
+            sorted(fins["gather"], key=lambda f: f.uid),
+            sorted(fins["kernel"], key=lambda f: f.uid),
+        )
+    )
+    g, k = stats["gather"], stats["kernel"]
+    rows.append(row(
+        "serving/paged_long_gather", _pctl(g["lat"], 50) * 1e3,
+        f"tok_s={g['tok_s']:.1f};decode_tok_s={g['decode_tok_s']:.1f};"
+        + _latency_fields(g["lat"], g["ttft"], g["itl"])
+        + f";prompt={long_prompt};block={long_block}",
+    ))
+    rows.append(row(
+        "serving/paged_long_kernel", _pctl(k["lat"], 50) * 1e3,
+        f"tok_s={k['tok_s']:.1f};decode_tok_s={k['decode_tok_s']:.1f};"
+        + _latency_fields(k["lat"], k["ttft"], k["itl"])
+        + f";prompt={long_prompt};block={long_block}"
+        + f";gather_decode_tok_s={g['decode_tok_s']:.1f}"
+        + f";kernel_vs_gather="
+        + f"{k['decode_tok_s'] / max(g['decode_tok_s'], 1e-9):.2f}x"
+        + f";streams_match={int(streams_match)}",
     ))
     return rows
 

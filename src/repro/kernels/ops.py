@@ -20,11 +20,19 @@ same signature so later calls (and jit retraces) pick it up.  Swept
 winners are also mirrored to a per-backend JSON file
 (``repro.kernels.tile_cache``) loaded on the first lookup, so autotuning
 survives process restarts.
+
+The paged-attention family (``paged_attention`` + ``paged_tiles`` /
+``sweep_paged_tiles`` + the ``paged_attention_enabled`` /
+``paged_attention_supported`` dispatch gates) lives at the bottom of this
+module: ``models.attention._paged_scores`` routes the serving stack's
+paged-KV branches here, keeping the ``kv_pool.read`` gather + SDPA path
+as fallback and parity oracle.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import jax
@@ -35,6 +43,7 @@ from repro.core.quantization import quantize_act_int8  # noqa: F401  (re-export:
 from repro.kernels import ref, tile_cache
 from repro.kernels.decoupled_matmul import decoupled_matmul
 from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.rmsnorm_quant import rmsnorm_quant
 from repro.kernels.w1a8_gemv import decoupled_gemv, w1a8_gemv
 from repro.kernels.w1a8_matmul import w1a8_matmul
@@ -346,3 +355,153 @@ def decoupled_first_gemm(
             xf, w1_packed, w8_q, lam, w8scale, alpha, beta, out_dtype
         )
     return y1.reshape(*lead, -1), y8.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (block-table attention over the serving KV pool)
+# ---------------------------------------------------------------------------
+
+# pages-per-step candidates for the paged-attention autotune: how many pool
+# pages one grid step scores (the per-step KV tile is pages * block_size
+# columns wide)
+_PAGES_CANDIDATES = (8, 4, 2, 1)
+
+
+def paged_attention_enabled() -> bool:
+    """Whether the model stack's paged branches dispatch the Pallas kernel.
+
+    ``REPRO_PAGED_ATTN=1`` forces it on (interpret mode off-TPU — the
+    parity/bench configuration), ``=0`` forces the gather+SDPA fallback,
+    and the default (``auto``) enables it on TPU only: off-TPU the
+    interpreted kernel is a correctness tool, not a fast path, and the
+    serving parity suites rely on the fallback's bitwise-dense numerics.
+    """
+    v = os.environ.get("REPRO_PAGED_ATTN", "auto")
+    if v == "0":
+        return False
+    if v == "1":
+        return True
+    return on_tpu()
+
+
+def paged_attention_supported(
+    block_size: int, head_dim: int, n_q_heads: int, n_kv_heads: int
+) -> bool:
+    """Static shape gate for the kernel (callers fall back on False):
+    GQA grouping must divide evenly and page/head tiles must respect the
+    8-row packing/sublane alignment the kernel assumes."""
+    return (
+        n_q_heads % n_kv_heads == 0
+        and block_size % 8 == 0
+        and head_dim % 8 == 0
+    )
+
+
+def paged_tiles(
+    t: int, hq: int, hkv: int, d: int, bs: int, mb: int
+) -> int:
+    """pages-per-step for a paged-attention call: the autotuned winner if
+    one was swept (this process or a persisted earlier one), otherwise the
+    widest candidate that divides the table width (no wasted tail step)."""
+    _ensure_tile_cache_loaded()
+    cached = _DECODE_TILE_CACHE.get(("paged_attn", t, hq, hkv, d, bs, mb))
+    if cached is not None:
+        return int(cached[0])
+    for c in _PAGES_CANDIDATES:
+        if c <= mb and mb % c == 0:
+            return c
+    return 1
+
+
+def sweep_paged_tiles(
+    t: int,
+    hq: int,
+    hkv: int,
+    d: int,
+    bs: int,
+    mb: int,
+    *,
+    candidates=None,
+    warmup: int = 1,
+    iters: int = 3,
+    seed: int = 0,
+) -> int:
+    """Time the paged-attention kernel over pages-per-step candidates on
+    the current backend, persist the winner under the
+    ``(paged_attn, T, Hq, Hkv, D, block, max_blocks)`` signature (same
+    per-backend JSON the GEMV tables use), and return it."""
+    import numpy as np
+
+    key = ("paged_attn", t, hq, hkv, d, bs, mb)
+    rng = np.random.default_rng(seed)
+    nb = 2 * mb
+    q = jnp.asarray(rng.standard_normal((2, t, hq, d)).astype(np.float32))
+    kp = jnp.asarray(
+        rng.standard_normal((nb, bs, hkv, d)).astype(np.float32)
+    )
+    vp = jnp.asarray(
+        rng.standard_normal((nb, bs, hkv, d)).astype(np.float32)
+    )
+    table = jnp.asarray(
+        rng.permutation(nb)[: 2 * mb].reshape(2, mb).astype(np.int32)
+    )
+    # one full-context slot and one short one (both within capacity)
+    s0 = max(mb * bs - t, 0)
+    start = jnp.asarray([s0, min(bs, s0)], np.int32)
+    lens = start + t
+    interp = not on_tpu()
+    best, best_t = None, float("inf")
+    for pages in candidates or _PAGES_CANDIDATES:
+        if pages > mb:
+            continue
+        try:
+            call = functools.partial(
+                _paged_attention, q, kp, vp, table, start, lens,
+                pages=pages, interpret=interp,
+            )
+            for _ in range(warmup):
+                jax.block_until_ready(call())
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(call())
+                ts.append(time.perf_counter() - t0)
+            dt = min(ts)
+        except Exception:  # noqa: BLE001 — an invalid candidate just loses
+            continue
+        if dt < best_t:
+            best, best_t = pages, dt
+    if best is None:
+        best = paged_tiles(t, hq, hkv, d, bs, mb)
+    _DECODE_TILE_CACHE[key] = (best,)
+    tile_cache.store(jax.default_backend(), {key: (best,)})
+    return best
+
+
+def paged_attention(
+    q: Array,  # (B, T, Hq, D)
+    kpool: Array,  # (NB, BS, Hkv, D)
+    vpool: Array,  # (NB, BS, Hkv, D)
+    table: Array,  # (B, MB) int32
+    start: Array,  # (B,) int32 — absolute position of q[:, 0]
+    kv_lens: Array,  # (B,) int32 — resident tokens per slot
+    scale: float | None = None,
+) -> Array:
+    """Block-table attention over the paged KV pool (flash-decoding-style
+    online softmax, GQA/MQA grouping; T=1 decode, T>1 chunk/prefill).
+
+    The jit'd public wrapper: picks pages-per-step from the autotuned
+    table (``paged_tiles`` / ``sweep_paged_tiles``) and runs interpreted
+    off-TPU.  Callers gate on :func:`paged_attention_enabled` /
+    :func:`paged_attention_supported` and keep the ``kv_pool.read``
+    gather + SDPA path as fallback and parity oracle
+    (``ref.paged_attention_ref``).
+    """
+    t, hq, d = q.shape[1:]
+    bs, hkv = kpool.shape[1], kpool.shape[2]
+    mb = table.shape[1]
+    pages = paged_tiles(t, hq, hkv, d, bs, mb)
+    return _paged_attention(
+        q, kpool, vpool, table, start, kv_lens,
+        pages=pages, scale=scale, interpret=not on_tpu(),
+    )

@@ -105,6 +105,43 @@ def decoupled_gemv_ref(
     )
 
 
+def paged_attention_ref(
+    q: Array,  # (B, T, Hq, D)
+    kpool: Array,  # (NB, BS, Hkv, D)
+    vpool: Array,  # (NB, BS, Hkv, D)
+    table: Array,  # (B, MB) int32
+    start: Array,  # (B,) int32
+    kv_lens: Array,  # (B,) int32 (unused: the causal mask already bounds
+    # every valid row's columns — kept so ref and kernel share a signature)
+    scale=None,
+    out_dtype=None,
+):
+    """Gather + prefix-masked SDPA at f32 — the dense read path the paged
+    kernel replaces (``kv_pool.read`` followed by
+    ``models.attention._sdpa`` under ``_span_mask``), with query token t
+    of slot b attending absolute columns ``j <= start[b] + t``.
+    """
+    del kv_lens
+    b, t, hq, d = q.shape
+    bs, hkv = kpool.shape[1], kpool.shape[2]
+    g = hq // hkv
+    scale = d**-0.5 if scale is None else scale
+    keys = jnp.take(kpool, table, axis=0).reshape(b, -1, hkv, d)
+    vals = jnp.take(vpool, table, axis=0).reshape(b, -1, hkv, d)
+    skv = keys.shape[1]
+    qg = q.reshape(b, t, hkv, g, d).astype(jnp.float32)
+    logits = (
+        jnp.einsum("bqhgd,bkhd->bhgqk", qg, keys.astype(jnp.float32)) * scale
+    )
+    rowpos = start[:, None] + jnp.arange(t, dtype=start.dtype)[None]
+    mask = jnp.arange(skv)[None, None, :] <= rowpos[:, :, None]  # (B,T,Skv)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, vals.astype(jnp.float32))
+    out = out.reshape(b, t, hq, d)
+    return out.astype(out_dtype if out_dtype is not None else q.dtype)
+
+
 def decoupled_matmul_ref(
     x_i8: Array,
     w1_packed: Array,

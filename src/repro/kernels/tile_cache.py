@@ -1,22 +1,27 @@
-"""On-disk persistence for the decode-tier tile dispatch table.
+"""On-disk persistence for the kernel-tier autotune dispatch tables.
 
-``ops.sweep_decode_tiles`` times candidate (bk, bn) tiles and caches the
-winner per (op, m, k, n[, r]) signature — but only in-process, so every
-server restart re-pays the sweep.  This module mirrors that table to a
+``ops.sweep_decode_tiles`` times candidate (bk, bn) tiles per
+(op, m, k, n[, r]) GEMV signature, and ``ops.sweep_paged_tiles`` times
+pages-per-step per ``(paged_attn, T, Hq, Hkv, head_dim, block_size,
+max_blocks)`` paged-attention signature — but only in-process, so every
+server restart re-pays the sweep.  This module mirrors those tables to a
 per-backend JSON file:
 
     $REPRO_TILE_CACHE_DIR/decode_tiles_{backend}.json
     (default: ~/.cache/repro/)
 
-``ops`` loads the file lazily on the first decode-tile lookup and appends
-every newly swept winner, so autotuning survives process restarts.  Tile
+``ops`` loads the file lazily on the first tile lookup and appends every
+newly swept winner, so autotuning survives process restarts.  Tile
 winners are backend-specific (a TPU sweep means nothing on CPU interpret
 mode), hence the per-backend file.  Set ``REPRO_TILE_CACHE=0`` to disable
 both load and store (hermetic CI runs).
 
-File format: ``{"op|m|k|n[|r]": [bk, bn], ...}`` — flat, mergeable, and
-stable under concurrent writers (atomic replace; last writer wins on a
-per-key basis after merging with the on-disk content).
+File format: ``{"op|int|int|...": [int, ...], ...}`` — flat, mergeable,
+and stable under concurrent writers (atomic replace; last writer wins on
+a per-key basis after merging with the on-disk content).  Values are
+kernel-family-shaped: ``[bk, bn]`` for the GEMV ops, ``[pages]`` for
+paged attention — both keys and values are variable-arity int tuples, so
+new kernel families extend the same file without a format bump.
 """
 
 from __future__ import annotations
@@ -48,21 +53,37 @@ def _decode_key(s: str) -> tuple:
     return (parts[0],) + tuple(int(p) for p in parts[1:])
 
 
-def load(backend: str) -> dict[tuple, tuple[int, int]]:
-    """Persisted winners for ``backend`` ({} on any miss/corruption —
+def _valid_entry(key: tuple, val: tuple) -> bool:
+    """Family-shaped EXACT arity check: paged_attn winners are (pages,),
+    the GEMV families are (bk, bn).  A wrong-arity value — short or long —
+    must be dropped at load time: dispatch tuple-unpacks these, and a
+    broken cache file must never break inference."""
+    return len(val) == (1 if key[0] == "paged_attn" else 2)
+
+
+def load(backend: str) -> dict[tuple, tuple[int, ...]]:
+    """Persisted winners for ``backend`` ({} on any miss/corruption,
+    per-entry validation drops malformed keys/values —
     a broken cache file must never break inference)."""
     if not enabled():
         return {}
     try:
         raw = json.loads(cache_path(backend).read_text())
-        return {
-            _decode_key(k): (int(v[0]), int(v[1])) for k, v in raw.items()
-        }
+        out = {}
+        for k, v in raw.items():
+            try:
+                key = _decode_key(k)
+                val = tuple(int(x) for x in v)
+            except (ValueError, TypeError, IndexError):
+                continue  # one bad entry must not poison the rest
+            if key and _valid_entry(key, val):
+                out[key] = val
+        return out
     except (OSError, ValueError, KeyError, IndexError, TypeError):
         return {}
 
 
-def store(backend: str, table: dict[tuple, tuple[int, int]]) -> None:
+def store(backend: str, table: dict[tuple, tuple[int, ...]]) -> None:
     """Merge ``table`` into the on-disk cache (best-effort: serving never
     fails because a cache dir is read-only).  Atomic replace so concurrent
     sweeps can't interleave partial JSON."""

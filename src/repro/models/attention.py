@@ -16,7 +16,11 @@ interchangeable layouts ride the same call sites:
   sliding-window layers; slot(p) = p % L *is* the window).
 * paged — ``{"kpool", "vpool", "table"}`` from ``repro.serve.kv_pool``: a
   shared block pool plus per-slot block tables.  The ``"table"`` key is
-  the layout discriminator.
+  the layout discriminator.  Paged scoring dispatches to the Pallas
+  block-table kernel (``kernels.paged_attention``, walks each slot's
+  pages in place) when ``kernels.ops.paged_attention_enabled()``; the
+  ``kv_pool.read`` gather + SDPA path remains the fallback and parity
+  oracle (see :func:`_paged_scores`).
 
 ``pos`` may be the model-level scalar (lockstep decode: every slot at the
 same position) or a ``(B,)`` vector (continuous batching: ragged slots).
@@ -328,6 +332,46 @@ def _ring_chunk(q, k, v, cache: dict, posmat: Array, valid: Array | None):
     return jnp.moveaxis(outs, 0, 1), {"k": kc, "v": vc}
 
 
+def _paged_scores(
+    q: Array,  # (B, T, Hq, D) — rotated queries
+    kpool: Array,
+    vpool: Array,
+    table: Array,
+    posv: Array,  # (B,) — absolute position of q[:, 0]
+    posmat: Array,  # (B|1, T) — per-(slot, token) absolute positions
+    n_valid,  # (B,) lengths of a ragged slice, or the static T
+    read_to: int | None,
+) -> Array:
+    """Score queries against the paged pool: Pallas block-table kernel
+    when enabled (``kernels.paged_attention`` — walks each slot's pages
+    in place, no dense gather), else the ``kv_pool.read`` gather +
+    prefix-masked SDPA, which stays the parity oracle.  The fallback
+    clamps its gather to the used-block prefix when the caller provides a
+    static ``read_to`` bound; the kernel bounds its page walk per slot
+    with the resident length ``posv + n_valid`` instead (no static bound
+    needed).  Decode is the T=1 case: ``posmat = posv[:, None]`` makes
+    ``_span_mask`` exactly the decode prefix mask."""
+    from repro.kernels import ops  # deferred: kernels tier is optional here
+
+    b, t = q.shape[:2]
+    bs = kpool.shape[1]
+    if ops.paged_attention_enabled() and ops.paged_attention_supported(
+        bs, q.shape[-1], q.shape[2], kpool.shape[2]
+    ):
+        kv_lens = jnp.clip(posv + n_valid, 1, table.shape[1] * bs)
+        return ops.paged_attention(
+            q, kpool, vpool, table, posv, kv_lens
+        ).astype(q.dtype)
+    from repro.serve import kv_pool  # deferred: serve imports models
+
+    mb = table.shape[1]
+    nb = mb if read_to is None else max(1, min(mb, -(-read_to // bs)))
+    keys = kv_pool.read(kpool, table, blocks=nb)
+    vals = kv_pool.read(vpool, table, blocks=nb)
+    mask = _span_mask(jnp.broadcast_to(posmat, (b, t)), keys.shape[1])
+    return _sdpa(q, keys.astype(q.dtype), vals.astype(q.dtype), mask)
+
+
 def attention_chunk(
     params,
     x: Array,
@@ -358,7 +402,10 @@ def attention_chunk(
     when the caller knows no position >= read_to can be attended — prefill
     from an empty cache passes its prompt length, keeping scoring
     O(S*S) instead of O(S*cache_len); the masked-out columns it drops
-    contribute exact zeros to the softmax either way.
+    contribute exact zeros to the softmax either way.  The paged fallback
+    gather honors the same bound (``kv_pool.read(blocks=ceil(read_to /
+    block_size))``); the paged *kernel* path needs no static bound — it
+    clamps each slot's page walk to its resident length.
 
     Returns (y (B, T, D), new_cache).
     """
@@ -385,10 +432,10 @@ def attention_chunk(
         vp = kv_pool.write_span(
             cache["vpool"], cache["table"], posv, v, active, lengths
         )
-        keys = kv_pool.read(kp, cache["table"])
-        vals = kv_pool.read(vp, cache["table"])
-        mask = _span_mask(jnp.broadcast_to(posmat, (b, t)), keys.shape[1])
-        out = _sdpa(q, keys.astype(q.dtype), vals.astype(q.dtype), mask)
+        out = _paged_scores(
+            q, kp, vp, cache["table"], posv, posmat,
+            lengths if lengths is not None else t, read_to,
+        )
         new_cache = {"kpool": kp, "vpool": vp, "table": cache["table"]}
         return _out_proj(params, out, cfg), new_cache
 
@@ -429,7 +476,8 @@ def attention_decode(
     validity mask covers min(pos+1, cache_len) slots — a cache of length W
     IS the W-token sliding window, so no extra window masking is needed.
     Paged caches (``"table"`` key) scatter into the shared block pool and
-    gather a dense view back for scoring (see ``repro.serve.kv_pool``).
+    score via :func:`_paged_scores` — the Pallas block-table kernel when
+    enabled, else the dense-view gather (see ``repro.serve.kv_pool``).
 
     Returns (y, new_cache).
     """
@@ -447,10 +495,9 @@ def attention_decode(
         posv = jnp.broadcast_to(pos, (b,))
         kp = kv_pool.write(cache["kpool"], cache["table"], posv, k[:, 0], active)
         vp = kv_pool.write(cache["vpool"], cache["table"], posv, v[:, 0], active)
-        keys = kv_pool.read(kp, cache["table"])
-        vals = kv_pool.read(vp, cache["table"])
-        mask = _decode_mask(posv, keys.shape[1], ring=False)
-        out = _sdpa(q, keys.astype(q.dtype), vals.astype(q.dtype), mask)
+        out = _paged_scores(
+            q, kp, vp, cache["table"], posv, posv[:, None], 1, None
+        )
         new_cache = {"kpool": kp, "vpool": vp, "table": cache["table"]}
         return _out_proj(params, out, cfg), new_cache
 
@@ -625,7 +672,9 @@ def mla_chunk(
     prefix.  T=1 dispatches to :func:`mla_decode` (bit-for-bit the decode
     stream); the latent cache stays dense in both layouts (caching only
     ``(B, L, kv_lora_rank)`` latents is already the memory win paging
-    chases).  Returns (y (B, T, D), new_cache)."""
+    chases) — with no paged K/V to walk, the block-table attention
+    kernel does not apply here and MLA keeps its dense latent expansion.
+    Returns (y (B, T, D), new_cache)."""
     b, t = x.shape[:2]
     if t == 1 and lengths is None:
         return mla_decode(params, x, cache, pos, cfg, active=active)

@@ -39,6 +39,25 @@ layers keep their dense ring caches, whose length *is* the window).  The
 model stack dispatches on the ``"table"`` key, so every engine tier runs
 either layout and produces identical tokens.
 
+Paged attention kernel: scoring over the paged layout dispatches to the
+Pallas block-table kernel (``repro.kernels.paged_attention``) whenever
+``kernels.ops.paged_attention_enabled()`` — ``REPRO_PAGED_ATTN=1`` forces
+it on (interpret mode off-TPU), ``=0`` forces the fallback, default
+enables it on TPU only — and the static shapes qualify
+(``ops.paged_attention_supported``: GQA grouping divides, block_size and
+head_dim 8-aligned).  The kernel walks each slot's block table in place
+with a flash-decoding online softmax (per-slot work bounded by the
+resident length, never the table capacity) and serves all three tiers
+through the one read path: decode steps (T=1), chunked-prefill slices and
+one-shot prefill (T>1).  The ``kv_pool.read`` gather + SDPA path remains
+the fallback and parity oracle — it is bitwise the dense computation,
+while the kernel is float-rounding-close (online softmax re-associates
+the reduction), which is exactly why the default keeps the fallback on
+CPU where the bit-for-bit cross-layout suites run.  Pages-per-step is
+autotuned per (T, heads, head_dim, block, table-width) signature via
+``ops.sweep_paged_tiles`` and persisted per backend alongside the GEMV
+tile tables (``REPRO_TILE_CACHE`` / ``REPRO_TILE_CACHE_DIR`` env vars).
+
 All three tiers serve either weight layout: latent fake-quant params (float
 matmuls on the quantization grid) or the packed integer export from
 ``repro.train.quantized_serving.quantize_params_for_serving(packed=True)``,

@@ -106,12 +106,13 @@ def write_span(
     """Scatter a span of T tokens per slot into its pages: position
     ``pos[b] + t`` lands at ``(table[b, (pos[b]+t) // BS], (pos[b]+t) % BS)``.
 
-    This is the multi-token generalisation of :func:`write` that chunked
-    prefill uses — prompt slices land directly in pool pages instead of
-    being prefilled into a dense buffer and installed via
-    :func:`scatter_prefill`.  Masked entries (inactive slot, or ``t >=
-    lengths[b]`` on a ragged final slice) are routed out of bounds and
-    dropped, exactly like :func:`write`'s inactive slots.
+    This is the multi-token generalisation of :func:`write` that both
+    chunked prefill (prompt slices land directly in pool pages) and
+    one-shot admission install (a batch-1 prefilled dense cache scattered
+    into the slot's pages in one span) run — the single pool write path.
+    Masked entries (inactive slot, or ``t >= lengths[b]`` on a ragged
+    final slice) are routed out of bounds and dropped, exactly like
+    :func:`write`'s inactive slots.
     """
     bs = pool.shape[1]
     t = val.shape[1]
@@ -127,28 +128,25 @@ def write_span(
     return pool.at[blk, p % bs].set(val.astype(pool.dtype), mode="drop")
 
 
-def read(pool: Array, table: Array) -> Array:
-    """Gather a dense per-slot view: (B, MB * BS, H, D) in position order.
+def read(pool: Array, table: Array, blocks: int | None = None) -> Array:
+    """Gather a dense per-slot view: (B, nb * BS, H, D) in position order,
+    where ``nb`` is ``blocks`` (a static used-prefix bound) or the full
+    table width.
 
+    Callers that know no position ``>= blocks * BS`` can be attended (the
+    prefill path's static ``read_to`` bound, or a pool sized for far more
+    blocks than any live slot holds) pass ``blocks`` so the gather stops
+    at the used-block prefix instead of materializing the whole table —
+    at short contexts that is most of the fallback's memory traffic.
     Unallocated table entries point at block 0; the positions they cover
     sit beyond the slot's ``pos`` and are excluded by the attention mask,
     so the garbage is never read into a softmax lane.
     """
-    g = jnp.take(pool, table, axis=0)  # (B, MB, BS, H, D)
-    b, mb, bs = g.shape[:3]
-    return g.reshape(b, mb * bs, *g.shape[3:])
-
-
-def scatter_prefill(
-    pool: Array,  # (NB, BS, H, D)
-    dense: Array,  # (L, H, D) — one slot's prefilled cache, L % BS == 0
-    block_ids: Array,  # (nb,) int32 — blocks covering positions [0, nb*BS)
-) -> Array:
-    """Install a prefilled dense prefix into the pool page by page."""
-    bs = pool.shape[1]
-    nb = block_ids.shape[0]
-    pages = dense[: nb * bs].reshape(nb, bs, *dense.shape[1:])
-    return pool.at[block_ids].set(pages.astype(pool.dtype))
+    if blocks is not None:
+        table = table[:, : max(1, min(int(blocks), table.shape[1]))]
+    g = jnp.take(pool, table, axis=0)  # (B, nb, BS, H, D)
+    b, nb, bs = g.shape[:3]
+    return g.reshape(b, nb * bs, *g.shape[3:])
 
 
 class BlockAllocator:

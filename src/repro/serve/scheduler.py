@@ -48,6 +48,7 @@ them.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Callable, Optional
 
@@ -68,6 +69,43 @@ from repro.serve.engine import (
 )
 
 Array = jax.Array
+
+_log = logging.getLogger(__name__)
+
+# configs whose chunked-prefill decline has already been reported: the
+# fallback is a per-config property, so it is logged once per config —
+# not once per engine build, and certainly not once per admitted request
+_CHUNK_DECLINE_LOGGED: set[tuple] = set()
+
+
+def _chunk_decline_key(cfg: ModelConfig) -> tuple:
+    """The config identity :func:`_chunked_prefill_safe` actually decides
+    on — two configs that gate identically share one log line."""
+    return (
+        cfg.name,
+        cfg.family,
+        bool(cfg.moe),
+        cfg.quant.num_experts,
+        cfg.n_image_tokens,
+        tuple(
+            spec.mixer
+            for seg in build_segments(cfg)
+            for spec in seg.blocks
+        ),
+    )
+
+
+def _log_chunked_prefill_decline(cfg: ModelConfig) -> None:
+    key = _chunk_decline_key(cfg)
+    if key in _CHUNK_DECLINE_LOGGED:
+        return
+    _CHUNK_DECLINE_LOGGED.add(key)
+    _log.warning(
+        "config %r: chunked admission prefill declined (recurrent mixer / "
+        "MoE / routed branches / VLM prefix would change streams across "
+        "slice boundaries); falling back to one-shot admission prefill",
+        cfg.name,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -161,16 +199,26 @@ def _row_set(big: Array, small: Array, slot: Array, stacked: bool) -> Array:
 
 def _make_install_fn(cfg: ModelConfig, nb: int):
     """Install a batch-1 prefill cache into slot ``slot`` of the big cache
-    tree.  ``nb`` (static) is the number of prompt-covering pages scattered
-    into the pool for paged layers; dense leaves copy the whole row."""
+    tree.  ``nb`` (static) is the number of prompt-covering pages for
+    paged layers — their dense prefill rows land in the pool through the
+    same ``kv_pool.write_span`` span scatter chunked prefill writes with
+    (one write path, no separate page-install primitive); dense leaves
+    copy the whole row."""
 
     def install(big, small, slot, table_row):
         def blockfn(spec, stacked, bigc, smallc):
             if "table" in bigc:
-                bids = table_row[:nb]
+                start = jnp.zeros((1,), jnp.int32)
 
                 def scatter(pool, dense):
-                    return kv_pool.scatter_prefill(pool, dense[0], bids)
+                    # dense: (1, L, H, D) — the slot's prefilled cache;
+                    # span-write exactly its nb prompt-covering pages (the
+                    # static slice keeps the scatter O(nb * bs), not
+                    # O(max_len))
+                    bs = pool.shape[1]
+                    return kv_pool.write_span(
+                        pool, table_row[None], start, dense[:, : nb * bs]
+                    )
 
                 if stacked:
                     scatter = jax.vmap(scatter)
@@ -461,6 +509,8 @@ class ContinuousBatchingEngine:
             prefill_chunk if (prefill_chunk is not None
                               and _chunked_prefill_safe(cfg)) else None
         )
+        if prefill_chunk is not None and self.prefill_chunk is None:
+            _log_chunked_prefill_decline(cfg)
         self._prefill_chunk = (
             jax.jit(
                 _make_prefill_chunk_fn(cfg, self.scfg, self.prefill_chunk),

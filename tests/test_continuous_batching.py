@@ -419,6 +419,78 @@ def test_chunked_prefill_gating_and_fallback(params):
     assert eng.prefill_chunk is None and eng._prefill_chunk is None
 
 
+@pytest.mark.parametrize("prefill_chunk", [None, 3])
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_parity_with_paged_attention_kernel_enabled(params, reference,
+                                                    layout, prefill_chunk,
+                                                    monkeypatch):
+    """The paged-attention kernel serves the paged layout end to end
+    (decode chunks, chunked-prefill slices, one-shot installs) and every
+    request's stream still equals ``DecodeEngine.generate`` — greedy
+    sampling, so the kernel's float-rounding-level logit differences
+    (online softmax vs the oracle's dense softmax) must not move any
+    argmax over the whole trace.  The dense layout rides along: with the
+    kernel enabled it has nothing paged to walk and must stay bit-for-bit
+    on the dense path."""
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_PAGED_ATTN", "1")
+    assert ops.paged_attention_enabled()
+    scfg = SamplerConfig(temperature=0.0, max_new_tokens=4)
+    want = {
+        uid: reference.generate(
+            jnp.asarray(_prompt(uid + 10, n)[None]), scfg, seed=uid
+        )[0]
+        for uid, n in list(PROMPTS.items())[:3]
+    }
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=scfg,
+        layout=layout, block_size=8, chunk=2, prefill_chunk=prefill_chunk,
+    )
+    for uid, n in list(PROMPTS.items())[:3]:
+        eng.submit(_prompt(uid + 10, n), max_new_tokens=4, seed=uid, uid=uid)
+    finished = eng.run()
+    assert sorted(f.uid for f in finished) == sorted(want)
+    for f in finished:
+        np.testing.assert_array_equal(f.tokens, want[f.uid])
+    if layout == "paged":
+        assert eng.allocator.free_count == eng.num_blocks
+
+
+def test_chunked_prefill_decline_logs_once_per_config(params, caplog):
+    """An unsafe config requesting chunked prefill logs the one-shot
+    fallback ONCE per config — building more engines (or serving more
+    requests) on the same config adds no lines; a different config gets
+    its own line."""
+    import logging
+
+    from repro.serve import scheduler as sched
+
+    ssm = ModelConfig(name="s", family="ssm", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=64,
+                      quant=QC, ssm_state=8, ssm_headdim=8, ssm_chunk=4,
+                      glu=False)
+    sparams, _ = api.init_model(KEY, ssm)
+    sched._CHUNK_DECLINE_LOGGED.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.serve.scheduler"):
+        for _ in range(3):  # same config, three engines: one line
+            eng = ContinuousBatchingEngine(
+                sparams, ssm, num_slots=1, max_len=16, scfg=SCFG,
+                layout="dense", chunk=2, prefill_chunk=4,
+            )
+            assert eng.prefill_chunk is None
+    declines = [r for r in caplog.records if "declined" in r.message]
+    assert len(declines) == 1
+    # a config that accepts chunked prefill logs nothing
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.serve.scheduler"):
+        ContinuousBatchingEngine(
+            params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+            layout="dense", chunk=2, prefill_chunk=4,
+        )
+    assert not [r for r in caplog.records if "declined" in r.message]
+
+
 def test_chunked_prefill_budget_one_finishes_at_final_slice(params,
                                                            reference):
     """budget=1 under chunked prefill: the final slice's sampled token

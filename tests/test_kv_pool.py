@@ -1,4 +1,5 @@
-"""Paged KV pool unit tests: allocator accounting, scatter/gather
+"""Paged KV pool unit tests: allocator accounting (incl. a hypothesis
+property test over random alloc/free/preemption traces), scatter/gather
 roundtrips, masked writes, and the dense-view equivalence the attention
 parity tests build on."""
 
@@ -39,6 +40,83 @@ class TestBlockAllocator:
         with pytest.raises(ValueError, match="out of range"):
             a.free([99])
 
+    @staticmethod
+    def _check_alloc_trace(num_blocks: int, ops) -> None:
+        """Invariant driver for one alloc/free/preemption trace: the
+        allocator never double-allocates a live block, a failed alloc
+        changes nothing, and ``free_count + outstanding == num_blocks``
+        holds at every step (conservation — no block leaks, no block
+        invented).  ``ops`` is a list of (kind, n, pick) int triples."""
+        a = kv_pool.BlockAllocator(num_blocks)
+        live: dict[int, list[int]] = {}  # request -> owned blocks
+        next_uid = 0
+        for kind, n, pick in ops:
+            outstanding = sum(len(v) for v in live.values())
+            assert a.free_count + outstanding == num_blocks
+            if kind == 0:  # admission / per-chunk growth alloc
+                got = a.alloc(n)
+                if n > num_blocks - outstanding:
+                    assert got is None  # exhaustion: and no state change
+                    assert a.free_count == num_blocks - outstanding
+                    continue
+                assert got is not None and len(got) == n
+                owned = {b for v in live.values() for b in v}
+                # no double allocation: fresh ids only, all in range
+                assert not (set(got) & owned)
+                assert len(set(got)) == n
+                assert all(0 <= b < num_blocks for b in got)
+                if pick % 2 and live:  # growth of an existing request
+                    live[sorted(live)[pick % len(live)]].extend(got)
+                else:
+                    live[next_uid] = list(got)
+                    next_uid += 1
+            elif kind == 1 and live:  # eviction / preemption (free all)
+                uid = sorted(live)[pick % len(live)]
+                a.free(live.pop(uid))
+            elif kind == 2 and live:  # double free must be rejected
+                uid = sorted(live)[pick % len(live)]
+                blocks = live.pop(uid)
+                a.free(blocks)
+                if blocks:
+                    with pytest.raises(ValueError, match="double free"):
+                        a.free(blocks[:1])
+        outstanding = sum(len(v) for v in live.values())
+        assert a.free_count + outstanding == num_blocks
+
+    def test_property_random_alloc_free_preempt_traces(self):
+        """Hypothesis property test over arbitrary op interleavings (the
+        shrinking search is what earns its keep on a counterexample)."""
+        hypothesis = pytest.importorskip("hypothesis")
+        st = hypothesis.strategies
+
+        @hypothesis.given(
+            num_blocks=st.integers(1, 24),
+            ops=st.lists(
+                st.tuples(
+                    st.integers(0, 2), st.integers(0, 8), st.integers(0, 7)
+                ),
+                max_size=60,
+            ),
+        )
+        @hypothesis.settings(deadline=None, max_examples=60)
+        def run(num_blocks, ops):
+            self._check_alloc_trace(num_blocks, ops)
+
+        run()
+
+    def test_random_alloc_free_preempt_traces_seeded(self):
+        """Seeded-random sweep through the same invariant driver so the
+        property is exercised even where hypothesis isn't installed."""
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            num_blocks = int(rng.integers(1, 25))
+            ops = [
+                (int(rng.integers(0, 3)), int(rng.integers(0, 9)),
+                 int(rng.integers(0, 8)))
+                for _ in range(int(rng.integers(0, 61)))
+            ]
+            self._check_alloc_trace(num_blocks, ops)
+
 
 class TestPagedReadWrite:
     B, MB, BS, H, D, NB = 2, 3, 4, 2, 8, 7
@@ -76,13 +154,50 @@ class TestPagedReadWrite:
         assert (dense[0, 0] == 1.0).all()
         assert (dense[1] == 0.0).all()  # inactive slot untouched
 
-    def test_scatter_prefill_matches_dense_prefix(self):
+    def test_write_span_installs_dense_prefill_prefix(self):
+        """One-shot admission install (the scheduler's _make_install_fn)
+        is a batch-1 write_span of the prefilled dense cache, bounded to
+        the prompt-covering pages — the pool holds the dense prefix
+        element for element (scatter_prefill's old contract, now served
+        by the one write path)."""
         pool, table = self._pool_and_table()
-        L = 2 * self.BS  # two pages of prompt
-        dense = jax.random.normal(jax.random.PRNGKey(0), (L, self.H, self.D))
-        pool = kv_pool.scatter_prefill(pool, dense, table[0, :2])
-        got = np.asarray(kv_pool.read(pool, table))[0, :L]
-        np.testing.assert_array_equal(got, np.asarray(dense))
+        nb = 2  # prompt covers two pages
+        L = self.MB * self.BS  # the dense cache is full slot length
+        dense = jax.random.normal(
+            jax.random.PRNGKey(0), (1, L, self.H, self.D)
+        )
+        pool = kv_pool.write_span(
+            pool, table[:1], jnp.zeros((1,), jnp.int32), dense, None,
+            jnp.asarray([nb * self.BS], jnp.int32),
+        )
+        got = np.asarray(kv_pool.read(pool, table))[0]
+        np.testing.assert_array_equal(
+            got[: nb * self.BS], np.asarray(dense)[0, : nb * self.BS]
+        )
+        assert (got[nb * self.BS:] == 0.0).all()  # uncovered pages untouched
+
+    def test_read_clamps_to_used_block_prefix(self):
+        """``read(blocks=n)`` gathers only the first n table entries: same
+        values on the covered prefix, and the short gather never touches
+        the pool rows the dropped entries point at."""
+        pool, table = self._pool_and_table()
+        for p in range(self.BS + 1):  # spills into the second page
+            v = jax.random.normal(
+                jax.random.PRNGKey(p), (self.B, self.H, self.D)
+            )
+            pool = kv_pool.write(
+                pool, table, jnp.full((self.B,), p, jnp.int32), v, None
+            )
+        full = np.asarray(kv_pool.read(pool, table))
+        short = np.asarray(kv_pool.read(pool, table, blocks=2))
+        assert short.shape == (self.B, 2 * self.BS, self.H, self.D)
+        np.testing.assert_array_equal(short, full[:, : 2 * self.BS])
+        # the clamp never returns an empty gather and caps at the table
+        assert kv_pool.read(pool, table, blocks=0).shape[1] == self.BS
+        assert (
+            kv_pool.read(pool, table, blocks=99).shape[1]
+            == self.MB * self.BS
+        )
 
     def test_write_span_matches_token_loop(self):
         """The multi-token span scatter is elementwise the per-token

@@ -33,10 +33,45 @@ def test_store_load_roundtrip(tmp_cache):
     assert tile_cache.load("tpu") == {}
 
 
+def test_variable_arity_kernel_families_share_one_file(tmp_cache):
+    """Keys and values are variable-arity int tuples: the paged-attention
+    family's 7-part key / 1-tuple winner coexists with the GEMV 2-tuples
+    in the same per-backend file."""
+    table = {
+        ("w1a8_gemv", 8, 64, 32): (16, 32),
+        ("paged_attn", 1, 4, 2, 64, 16, 8): (4,),
+    }
+    tile_cache.store("cpu", table)
+    assert tile_cache.load("cpu") == table
+
+
 def test_store_merges_with_existing(tmp_cache):
     tile_cache.store("cpu", {("w1a8_gemv", 8, 64, 32): (16, 32)})
     tile_cache.store("cpu", {("w1a8_gemv", 8, 128, 32): (32, 32)})
     assert len(tile_cache.load("cpu")) == 2
+
+
+def test_wrong_arity_entries_dropped_not_crashing(tmp_cache):
+    """A valid-JSON cache with family-impossible value arity (a truncated
+    GEMV pair, an empty paged winner) must load as if those entries were
+    absent — dispatch unpacks the tuples, so letting them through would
+    crash inference instead of falling back to the heuristic."""
+    import json as _json
+
+    path = tile_cache.cache_path("cpu")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(_json.dumps({
+        "w1a8_gemv|8|64|32": [16],          # GEMV needs exactly (bk, bn)
+        "w1a8_gemv|8|64|64": [16, 32, 4],   # over-long unpacks wrong too
+        "paged_attn|1|4|2|64|16|8": [],     # paged needs exactly (pages,)
+        "w1a8_gemv|8|128|32": [32, 32],     # fine
+        "paged_attn|1|4|2|64|16|4": [2],    # fine
+        "decoupled_gemv|8|64|32|bad": [64, 16],  # non-int key part
+    }))
+    assert tile_cache.load("cpu") == {
+        ("w1a8_gemv", 8, 128, 32): (32, 32),
+        ("paged_attn", 1, 4, 2, 64, 16, 4): (2,),
+    }
 
 
 def test_corrupt_file_is_ignored(tmp_cache):
