@@ -16,6 +16,11 @@ Rows (``name,us_per_call,derived`` — us_per_call is p50 request latency):
                         long prompt no longer stalls every live decode
                         stream — the head-of-line latency this tier exists
                         to remove
+  serving/overload      2x-capacity Poisson trace against the bounded
+                        admission queue + per-request deadlines (the
+                        robustness layer): shed rate, deadline-miss rate
+                        and surviving tok/s — graceful degradation, not
+                        raw throughput
   serving/continuous_packed  continuous engine on
                         quantize_params_for_serving(packed=True) weights —
                         decode chunks execute the W1A8 GEMV kernel tier
@@ -269,9 +274,57 @@ def run(smoke: bool = False, num_slots: int | None = None,
         + f";itl_p95_vs_continuous={_pctl(citl, 95) / max(_pctl(kitl, 95), 1e-9):.2f}x",
     ))
 
+    # -- overload: 2x-capacity Poisson load against the robustness layer --
+    # arrivals/deadlines run on the engine's virtual clock (1 tick per
+    # engine step ~ `chunk` decode tokens per slot), so the offered load
+    # is set analytically: mean budget per arrival gap = 2x the pool's
+    # token service rate.  The bounded queue + per-request deadlines must
+    # shed — this row tracks HOW MUCH is shed/missed and what throughput
+    # survives, the graceful-degradation trajectory BENCH_serving.json
+    # follows per PR.
+    del ceng
+    over_n = 12 if smoke else 48
+    mean_budget = float(np.mean(budgets))
+    over_gap = mean_budget / (2.0 * num_slots * chunk)  # ticks
+    deadline_slack = 6.0 if smoke else 10.0  # ticks after arrival
+    otrace = make_trace(over_n, seed + 2, over_gap, prompt_lens, budgets)
+    oeng = ContinuousBatchingEngine(
+        params, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,
+        layout="paged", block_size=block, chunk=chunk,
+        max_queue=2 * num_slots, overload_policy="shed_oldest",
+    )
+    for r in otrace[:num_slots]:  # warm the compiled programs
+        oeng.submit(r["prompt"], max_new_tokens=r["budget"], seed=r["seed"],
+                    uid=r["uid"], arrival=0.0)
+    oeng.run()
+    base = oeng.now()  # the virtual clock keeps ticking across runs
+    wall0 = time.perf_counter()
+    for r in otrace:
+        oeng.submit(
+            r["prompt"], max_new_tokens=r["budget"], seed=r["seed"],
+            uid=over_n + r["uid"], arrival=base + r["arrival"],
+            deadline=base + r["arrival"] + deadline_slack,
+        )
+    ofin = oeng.run()
+    wall = time.perf_counter() - wall0
+    otoks = sum(len(f.tokens) for f in ofin)
+    shed = sum(f.finish_reason in ("shed", "rejected") for f in ofin)
+    missed = sum(f.finish_reason == "deadline" for f in ofin)
+    served = sum(f.finish_reason in ("stop", "length") for f in ofin)
+    rows.append(row(
+        "serving/overload", 0.0,
+        f"tok_s={otoks / max(wall, 1e-9):.1f};"
+        f"shed_rate={shed / over_n:.2f};"
+        f"deadline_miss_rate={missed / over_n:.2f};"
+        f"served_rate={served / over_n:.2f};"
+        f"offered_x_capacity=2.0;max_queue={2 * num_slots};"
+        f"deadline_slack_ticks={deadline_slack:g};"
+        f"free_blocks={oeng.allocator.free_count}/{oeng.num_blocks}",
+    ))
+
     from repro.train.quantized_serving import quantize_params_for_serving
 
-    del ceng, server
+    del oeng, server
     qparams, _ = quantize_params_for_serving(params, axes, cfg, packed=True)
     peng = ContinuousBatchingEngine(
         qparams, cfg, num_slots=num_slots, max_len=max_len, scfg=scfg,

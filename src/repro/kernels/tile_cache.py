@@ -27,11 +27,36 @@ new kernel families extend the same file without a format bump.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import pathlib
 import tempfile
 
 _KEY_SEP = "|"
+
+_log = logging.getLogger(__name__)
+
+# cache paths whose corruption has already been reported — warn once per
+# path per process, not once per load
+_CORRUPT_WARNED: set[str] = set()
+
+
+def _quarantine_corrupt(path: pathlib.Path, err: Exception) -> None:
+    """A cache file that does not parse is renamed to ``*.corrupt`` (so
+    the next sweep starts a fresh file instead of silently re-hitting the
+    same corruption forever) and reported once.  Best-effort: quarantine
+    must never break inference either."""
+    try:
+        path.replace(path.with_suffix(path.suffix + ".corrupt"))
+    except OSError:
+        pass
+    key = str(path)
+    if key not in _CORRUPT_WARNED:
+        _CORRUPT_WARNED.add(key)
+        _log.warning(
+            "tile cache %s is corrupt (%s); quarantined to %s.corrupt and "
+            "starting fresh", path, err, path,
+        )
 
 
 def enabled() -> bool:
@@ -64,23 +89,33 @@ def _valid_entry(key: tuple, val: tuple) -> bool:
 def load(backend: str) -> dict[tuple, tuple[int, ...]]:
     """Persisted winners for ``backend`` ({} on any miss/corruption,
     per-entry validation drops malformed keys/values —
-    a broken cache file must never break inference)."""
+    a broken cache file must never break inference).  A file that fails
+    to parse at all is quarantined to ``*.corrupt`` (with one warning per
+    path) so the corruption is visible and the next store starts clean."""
     if not enabled():
         return {}
+    path = cache_path(backend)
     try:
-        raw = json.loads(cache_path(backend).read_text())
-        out = {}
-        for k, v in raw.items():
-            try:
-                key = _decode_key(k)
-                val = tuple(int(x) for x in v)
-            except (ValueError, TypeError, IndexError):
-                continue  # one bad entry must not poison the rest
-            if key and _valid_entry(key, val):
-                out[key] = val
-        return out
-    except (OSError, ValueError, KeyError, IndexError, TypeError):
+        text = path.read_text()
+    except OSError:
         return {}
+    try:
+        raw = json.loads(text)
+        if not isinstance(raw, dict):
+            raise ValueError(f"expected a JSON object, got {type(raw).__name__}")
+    except ValueError as e:  # json.JSONDecodeError is a ValueError
+        _quarantine_corrupt(path, e)
+        return {}
+    out = {}
+    for k, v in raw.items():
+        try:
+            key = _decode_key(k)
+            val = tuple(int(x) for x in v)
+        except (ValueError, TypeError, IndexError):
+            continue  # one bad entry must not poison the rest
+        if key and _valid_entry(key, val):
+            out[key] = val
+    return out
 
 
 def store(backend: str, table: dict[tuple, tuple[int, ...]]) -> None:
@@ -103,14 +138,23 @@ def store(backend: str, table: dict[tuple, tuple[int, ...]]) -> None:
         # a reader (or a crash at any point) sees either the old complete
         # file or the new complete file, never a partial write.
         fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        ok = False
         try:
             with os.fdopen(fd, "w") as f:
                 f.write(payload)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
-        except BaseException:
-            os.unlink(tmp)
-            raise
+            ok = True
+        finally:
+            # remove the temp file on any failure without catching the
+            # in-flight exception: KeyboardInterrupt/SystemExit (and real
+            # write errors) propagate, and a failed unlink can never mask
+            # the original error
+            if not ok:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
     except OSError:
         pass

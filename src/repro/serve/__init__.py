@@ -65,6 +65,55 @@ where every backbone linear runs the Pallas W1A8 kernel tier and decode
 steps hit the fused-act-quant GEMV kernels (``repro.kernels``).  The packed
 engines are bit-for-bit self-consistent across tiers and stay within float
 rounding of the fake-quant oracle (``tests/test_packed_serving.py``).
+
+Request lifecycle (tier 3) — every submitted request traverses the state
+machine exactly once and finishes exactly once::
+
+    submit() ──────────────▶ queued ──admit──▶ prefilling ──first token──▶
+        │                      │                  │
+        │ dead on arrival      │ shed / deadline  │ deadline / NaN logits
+        ▼                      ▼                  ▼
+    finished(rejected)    finished(shed |    finished(deadline | error)
+                          deadline)
+                                                ┌──────────────────────┐
+    decoding ──stop token──▶ finished(stop)     │ preemption loops back│
+        │        budget ────▶ finished(length)  │ to queued; restart is│
+        │        deadline ──▶ finished(deadline)│ deterministic, so the│
+        └──non-finite logits▶ finished(error)   │ stream is unchanged  │
+                                                └──────────────────────┘
+
+``FinishedRequest.finish_reason`` is one of ``FINISH_REASONS``
+(``stop | length | deadline | shed | rejected | error``).  Robustness
+knobs on :class:`~repro.serve.scheduler.ContinuousBatchingEngine`:
+``max_queue`` + ``overload_policy`` bound the admission queue (load
+shedding), per-request ``deadline`` / ``ttft_budget`` are enforced at
+chunk boundaries, non-finite logits quarantine only the poisoned stream
+(reason ``"error"``; everyone else is bit-for-bit untouched), and a
+watchdog raises :class:`~repro.serve.scheduler.SchedulerStall` instead of
+spinning when no progress is possible.
+
+Fault injection (:mod:`repro.serve.faults`) drives all of this
+deterministically for tests and chaos runs::
+
+    from repro.serve import ContinuousBatchingEngine
+    from repro.serve.faults import (
+        AllocFailure, FaultInjector, PoisonLogits,
+    )
+
+    inj = FaultInjector([
+        AllocFailure(index=3),          # 4th alloc call fails
+        PoisonLogits(uid=1, gen_index=5),  # NaN logits at token 5
+    ])  # or FaultInjector.random(seed, uids) for a seeded schedule
+    eng = ContinuousBatchingEngine(params, cfg, num_slots=4, max_len=128,
+                                   faults=inj)
+    eng.submit(prompt, max_new_tokens=16, deadline=40.0)
+    done = eng.run()   # uid 1 finishes with reason "error"; all other
+                       # streams are bit-for-bit the fault-free run
+
+With ``faults=None`` (default) the hooks are skipped entirely and the
+compiled programs are byte-identical to the fault-free build — the chaos
+suite (``tests/test_chaos.py``) asserts the graceful-degradation
+contract under random schedules in both cache layouts.
 """
 
 from repro.serve.engine import (  # noqa: F401
@@ -73,9 +122,19 @@ from repro.serve.engine import (  # noqa: F401
     decode_logits,
     sample_token,
 )
+from repro.serve.faults import (  # noqa: F401
+    AllocFailure,
+    DelayArrival,
+    FaultInjector,
+    ForcePreempt,
+    PoisonLogits,
+)
 from repro.serve.scheduler import (  # noqa: F401
+    FINISH_REASONS,
     ContinuousBatchingEngine,
     FinishedRequest,
+    InadmissibleRequest,
     Request,
     RequestState,
+    SchedulerStall,
 )

@@ -111,12 +111,17 @@ def _scan_decode(params, cfg, tok0, caches, pos0, key, length, scfg,
 def _prefill_sample(params, batch, pos_off, key, cfg, cache_len, scfg):
     """Prefill + sample the first token.  The single definition of the
     key-split order both generate and generate_stream (and the legacy loop
-    equivalence) depend on."""
+    equivalence) depend on.  The trailing ``ok`` mask — (B,) bool, are the
+    prefill logits finite — is the quarantine signal the continuous
+    engine's admission path reads; the lockstep entry points ignore it
+    (it is a pure function of logits they already computed, so carrying it
+    changes no numerics)."""
     logits, caches = api.prefill(params, batch, cfg, cache_len)
     key, sub = jax.random.split(key)
     tok0 = sample_token(sub, logits, scfg)
     pos0 = jnp.asarray(batch["tokens"].shape[1], jnp.int32) + pos_off
-    return tok0, caches, pos0, key
+    ok = jnp.isfinite(logits).all(axis=-1)
+    return tok0, caches, pos0, key, ok
 
 
 def _make_generate_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
@@ -125,7 +130,7 @@ def _make_generate_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
     t = scfg.max_new_tokens
 
     def gen(params, batch, pos_off, key):
-        tok0, caches, pos0, key = _prefill_sample(
+        tok0, caches, pos0, key, _ = _prefill_sample(
             params, batch, pos_off, key, cfg, cache_len, scfg
         )
         rest, _ = _scan_decode(
@@ -138,8 +143,29 @@ def _make_generate_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
 
 def _make_prefill_fn(cfg: ModelConfig, cache_len: int, scfg: SamplerConfig):
     def prefill(params, batch, pos_off, key):
-        return _prefill_sample(params, batch, pos_off, key, cfg, cache_len,
-                               scfg)
+        tok0, caches, pos0, key, _ = _prefill_sample(
+            params, batch, pos_off, key, cfg, cache_len, scfg
+        )
+        return tok0, caches, pos0, key
+
+    return prefill
+
+
+def _make_checked_prefill_fn(cfg: ModelConfig, cache_len: int,
+                             scfg: SamplerConfig):
+    """Batch-1 admission prefill with the quarantine signal packed into
+    the token fetch: returns ``([tok0, ok] (2,) int32, caches, pos0,
+    key)`` so the continuous engine learns about non-finite prefill logits
+    on the ONE scalar fetch it already pays per admission — no extra
+    device->host sync.  Token and key-split order are exactly
+    :func:`_prefill_sample`'s (same fn), preserving stream parity."""
+
+    def prefill(params, batch, pos_off, key):
+        tok0, caches, pos0, key, ok = _prefill_sample(
+            params, batch, pos_off, key, cfg, cache_len, scfg
+        )
+        packed = jnp.stack([tok0[0], ok[0].astype(jnp.int32)])
+        return packed, caches, pos0, key
 
     return prefill
 
@@ -151,7 +177,9 @@ def _make_bucketed_prefill_fn(cfg: ModelConfig, cache_len: int,
     length, so ONE trace serves every prompt length in the bucket.  Logits
     come from position ``plen - 1`` and ``pos0 = plen``; the key-split
     order matches :func:`_prefill_sample` exactly (split after prefill),
-    preserving the per-request determinism contract."""
+    preserving the per-request determinism contract.  Returns the same
+    packed ``[tok0, ok]`` pair as :func:`_make_checked_prefill_fn` (this
+    path is only ever the continuous engine's)."""
 
     def prefill(params, batch, plen, key):
         logits, caches = api.prefill(
@@ -159,7 +187,9 @@ def _make_bucketed_prefill_fn(cfg: ModelConfig, cache_len: int,
         )
         key, sub = jax.random.split(key)
         tok0 = sample_token(sub, logits, scfg)
-        return tok0, caches, jnp.asarray(plen, jnp.int32), key
+        ok = jnp.isfinite(logits).all(axis=-1)
+        packed = jnp.stack([tok0[0], ok[0].astype(jnp.int32)])
+        return packed, caches, jnp.asarray(plen, jnp.int32), key
 
     return prefill
 

@@ -156,10 +156,17 @@ class BlockAllocator:
     scheduler allocates at admission / chunk boundaries and frees on
     eviction.  ``free_count`` + outstanding == ``num_blocks`` always — the
     reclamation test asserts no blocks leak across a full trace.
+
+    ``fail_hook`` is the fault-injection seam (see
+    :mod:`repro.serve.faults`): a callable consulted once per ``alloc``
+    whose ``True`` forces that call to fail with exhaustion semantics —
+    ``None`` returned, no state change.  ``None`` (the default) costs one
+    ``is not None`` check per alloc and nothing else.
     """
 
-    def __init__(self, num_blocks: int):
+    def __init__(self, num_blocks: int, fail_hook=None):
         self.num_blocks = num_blocks
+        self.fail_hook = fail_hook
         self._free = list(range(num_blocks - 1, -1, -1))  # pop() -> low ids
 
     @property
@@ -167,7 +174,10 @@ class BlockAllocator:
         return len(self._free)
 
     def alloc(self, n: int) -> list[int] | None:
-        """n block ids, or None (and no change) if the pool is exhausted."""
+        """n block ids, or None (and no change) if the pool is exhausted
+        (or a fault-injection hook says to pretend it is)."""
+        if self.fail_hook is not None and self.fail_hook():
+            return None
         if n > len(self._free):
             return None
         return [self._free.pop() for _ in range(n)]

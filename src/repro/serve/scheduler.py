@@ -38,15 +38,42 @@ token stream is therefore identical to
 truncation — the parity tests assert this bit-for-bit, for both the dense
 and paged cache layouts, with and without chunked prefill.
 
-Host-transfer hygiene: one fetch of the packed ``(B, chunk+1)`` token
-matrix per decode chunk (the last column is the device's post-chunk active
-mask, cross-checked against the host mirror), plus one scalar fetch per
-admission (the prefill-sampled first token).  ``host_transfers`` counts
-them.
+Host-transfer hygiene: one fetch of the packed ``(B, chunk+2)`` token
+matrix per decode chunk (the trailing columns are the device's post-chunk
+active mask, cross-checked against the host mirror, and the per-slot
+quarantine step of the NaN/Inf logit-validity mask), plus one packed
+``[token, valid]`` fetch per admission (the prefill-sampled first token).
+``host_transfers`` counts them.
+
+Robustness contract (the failure story every later scale PR inherits):
+
+* **request lifecycle** — queued -> prefilling -> decoding ->
+  finished(reason), with ``finish_reason`` one of :data:`FINISH_REASONS`;
+  every submitted request finishes exactly once.
+* **deadlines** — per-request wall-clock ``deadline`` and ``ttft_budget``
+  are enforced at chunk boundaries: expired requests are evicted with
+  reason ``"deadline"`` (partial tokens kept — a prefix of the fault-free
+  stream) and their blocks reclaimed, including mid-chunked-prefill.
+* **load shedding** — ``max_queue`` bounds the admission queue;
+  ``overload_policy`` picks who is shed (``"reject"`` drops the new
+  request, ``"shed_oldest"`` drops the head of the queue) with reason
+  ``"shed"``; ``submit`` raises :class:`InadmissibleRequest` for requests
+  that can *never* fit instead of deferring the failure to a later stall.
+* **NaN/Inf quarantine** — a per-slot logit-validity mask rides the
+  existing per-chunk transfer; a slot whose logits go non-finite is
+  quarantined and finished with reason ``"error"`` while every other
+  stream stays bit-for-bit the fault-free run.
+* **watchdog** — a run that stops making progress while work is ready
+  raises a diagnosable :class:`SchedulerStall` instead of spinning.
+* **fault injection** — a :class:`repro.serve.faults.FaultInjector` can
+  deterministically force allocator failures, preemptions, poisoned
+  logits and delayed arrivals through no-op-by-default hooks; disabled,
+  the compiled programs are byte-identical to the fault-free build.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 import time
@@ -64,13 +91,37 @@ from repro.serve.engine import (
     SamplerConfig,
     _hit_stop,
     _make_bucketed_prefill_fn,
-    _make_prefill_fn,
+    _make_checked_prefill_fn,
     sample_token,
 )
+from repro.serve.faults import FaultInjector
 
 Array = jax.Array
 
 _log = logging.getLogger(__name__)
+
+#: The finish-reason taxonomy.  ``stop`` — stop token; ``length`` — token
+#: budget exhausted; ``deadline`` — deadline / TTFT budget expired (queued
+#: or live); ``shed`` — dropped by the bounded-queue overload policy;
+#: ``rejected`` — dead on arrival at submit (deadline already unmeetable);
+#: ``error`` — NaN/Inf logit quarantine.
+FINISH_REASONS = frozenset(
+    {"stop", "length", "deadline", "shed", "rejected", "error"}
+)
+
+
+class InadmissibleRequest(ValueError):
+    """A request that can never be served: prompt + budget exceed the slot
+    capacity, or its blocks exceed the whole pool.  Raised by ``submit``
+    so impossibility surfaces at the API boundary, not as a later
+    scheduler stall."""
+
+
+class SchedulerStall(RuntimeError):
+    """The engine stopped making progress while work was ready (or the
+    pool was exhausted with nothing to preempt).  The message carries the
+    queue depth, live-slot lifecycle and allocator state so the stall is
+    diagnosable from the exception alone."""
 
 # configs whose chunked-prefill decline has already been reported: the
 # fallback is a per-config property, so it is logged once per config —
@@ -116,15 +167,18 @@ def _log_chunked_prefill_decline(cfg: ModelConfig) -> None:
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One generation request.  ``seed`` makes the stream reproducible and
-    independent of scheduling; ``arrival`` is in the engine's clock units
+    independent of scheduling; ``arrival``, ``deadline`` (absolute) and
+    ``ttft_budget`` (relative to arrival) are in the engine's clock units
     (chunk ticks under the default virtual clock, seconds with a real
-    one)."""
+    one).  ``None`` deadlines never expire."""
 
     uid: int
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
     seed: int = 0
     arrival: float = 0.0
+    deadline: Optional[float] = None
+    ttft_budget: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -158,11 +212,14 @@ class RequestState:
 class FinishedRequest:
     uid: int
     tokens: np.ndarray  # (n,) int32, n <= max_new_tokens
-    finish_reason: str  # "stop" | "length"
+    finish_reason: str  # one of FINISH_REASONS
     prompt_len: int
     arrival: float
     admitted_at: float
-    first_token_at: float  # when the first token was sampled (TTFT anchor)
+    # when the first token was sampled (TTFT anchor); for zero-token
+    # finishes (shed / rejected / deadline-in-queue / prefill quarantine)
+    # it equals finished_at
+    first_token_at: float
     finished_at: float
 
 
@@ -255,19 +312,37 @@ def _make_set_tables_fn(cfg: ModelConfig):
     return set_tables
 
 
-def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
+def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int,
+                      poison: bool = False):
     """``length`` decode steps over the slot batch with per-slot positions,
-    keys, budgets and stop masks.  Returns (packed (B, length+1), caches,
-    state) — the packed matrix's last column is the post-chunk active mask,
-    riding the chunk's single device->host transfer.
+    keys, budgets and stop masks.  Returns (packed (B, length+2), caches,
+    state) — the packed matrix's last two columns are the post-chunk
+    active mask and the per-slot quarantine step, riding the chunk's
+    single device->host transfer.
+
+    NaN/Inf quarantine: each step's (B,) logit-validity mask
+    (``isfinite`` over the vocab axis — a cheap reduction of logits the
+    step already materialized, no extra sync) gates sampling exactly like
+    the active mask, so a slot whose logits go non-finite emits no
+    garbage token, writes nothing further, and carries the offending step
+    index home in the quarantine column (``length`` = untouched).  For
+    finite logits every ``where`` picks the same operand as before the
+    mask existed — the fault-free program is bitwise unchanged, which is
+    what keeps unaffected streams bit-for-bit under quarantine.
+
+    With ``poison=True`` the chunk takes an extra ``(B,) int32`` operand
+    naming the scan step at which each slot's logits are overwritten with
+    NaN (-1 = never) — the fault-injection variant, compiled lazily and
+    ONLY when a FaultInjector schedules a poison, so the disabled path
+    runs the exact program it always did.
 
     Per-slot sampling vmaps the batch-1 sampler over (key, logits-row)
     pairs, which is bit-for-bit what ``DecodeEngine`` computes for a
     batch-1 call with that key — the determinism contract of the module
     docstring."""
 
-    def chunk(params, caches, state):
-        def step(carry, _):
+    def chunk(params, caches, state, poison_step=None):
+        def step(carry, i):
             caches, st = carry
             split = jax.vmap(jax.random.split)(st["key"])  # (B, 2, 2)
             new_key, sub = split[:, 0], split[:, 1]
@@ -276,16 +351,28 @@ def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
                 active=st["active"],
             )
             logits = logits[:, -1]  # (B, V)
+            if poison:
+                logits = jnp.where(
+                    (poison_step == i)[:, None],
+                    jnp.full_like(logits, jnp.nan),
+                    logits,
+                )
+            finite = jnp.isfinite(logits).all(axis=-1)  # (B,)
+            ok = st["active"] & finite
             nxt = jax.vmap(
                 lambda s, l: sample_token(s, l[None], scfg)[0]
             )(sub, logits)
-            nxt = jnp.where(st["active"], nxt, st["tok"])
-            act = st["active"].astype(jnp.int32)
+            nxt = jnp.where(ok, nxt, st["tok"])
+            act = ok.astype(jnp.int32)
             ngen = st["ngen"] + act
             alive = (
-                st["active"]
+                ok
                 & ~_hit_stop(nxt, scfg)
                 & (ngen < st["budget"])
+            )
+            quar = jnp.where(
+                st["active"] & ~finite & (st["quar"] == length),
+                i, st["quar"],
             )
             st = {
                 "tok": nxt,
@@ -294,15 +381,21 @@ def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int):
                 "active": alive,
                 "ngen": ngen,
                 "budget": st["budget"],
+                "quar": quar,
             }
             return (caches, st), nxt
 
+        st0 = dict(
+            state, quar=jnp.full(state["tok"].shape, length, jnp.int32)
+        )
         (caches, st), toks = jax.lax.scan(
-            step, (caches, state), None, length=length
+            step, (caches, st0), jnp.arange(length, dtype=jnp.int32)
         )
         toks = jnp.moveaxis(toks, 0, 1)  # (B, length)
+        quar = st.pop("quar")
         packed = jnp.concatenate(
-            [toks, st["active"][:, None].astype(toks.dtype)], axis=1
+            [toks, st["active"][:, None].astype(toks.dtype),
+             quar[:, None]], axis=1,
         )
         return packed, caches, st
 
@@ -322,8 +415,9 @@ def _make_prefill_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, t: int):
     first token — and with it the whole stream — is bit-for-bit the
     lockstep engine's.  The sampled token and split key are computed every
     slice but only the slice that completes the prompt is read back by the
-    host (one scalar fetch per admission, same budget as one-shot
-    admission).
+    host (one packed ``[token, valid]`` fetch per admission — the
+    logit-validity bit rides the same transfer, so prefill quarantine
+    costs no extra sync; same budget as one-shot admission).
     """
 
     def pchunk(params, caches, tokens, pos, active, lengths, slot, key):
@@ -335,7 +429,8 @@ def _make_prefill_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, t: int):
         row = jnp.take(logits, slot, axis=0)
         key, sub = jax.random.split(key)
         tok0 = sample_token(sub, row[None], scfg)[0]
-        return tok0, caches, key
+        ok = jnp.isfinite(row).all().astype(jnp.int32)
+        return jnp.stack([tok0, ok]), caches, key
 
     return pchunk
 
@@ -446,6 +541,17 @@ class ContinuousBatchingEngine:
     clock : optional callable returning the current time in seconds; by
         default a virtual clock advances one tick per decode chunk and
         ``Request.arrival`` is in ticks.
+    max_queue : bound on the admission queue (``None`` = unbounded).  A
+        submit into a full queue invokes ``overload_policy`` and the loser
+        finishes with reason ``"shed"`` — backpressure is explicit, not an
+        unbounded list.
+    overload_policy : ``"reject"`` sheds the newly submitted request;
+        ``"shed_oldest"`` sheds the head of the queue and admits the new
+        one (freshest-work-wins).
+    watchdog_steps : consecutive no-progress steps (while work is ready)
+        tolerated before ``step`` raises :class:`SchedulerStall`.
+    faults : optional :class:`repro.serve.faults.FaultInjector`.  ``None``
+        (default) compiles and runs exactly the fault-free programs.
     """
 
     def __init__(
@@ -462,6 +568,10 @@ class ContinuousBatchingEngine:
         chunk: int = 8,
         prefill_chunk: Optional[int] = None,
         clock: Optional[Callable[[], float]] = None,
+        max_queue: Optional[int] = None,
+        overload_policy: str = "reject",
+        watchdog_steps: int = 256,
+        faults: Optional[FaultInjector] = None,
     ):
         if cfg.family == "encdec":
             raise NotImplementedError("continuous batching is decoder-only")
@@ -469,22 +579,47 @@ class ContinuousBatchingEngine:
             raise ValueError(f"unknown cache layout {layout!r}")
         if layout == "paged" and max_len % block_size:
             raise ValueError("max_len must be a multiple of block_size")
+        if overload_policy not in ("reject", "shed_oldest"):
+            raise ValueError(f"unknown overload policy {overload_policy!r}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.params, self.cfg = params, cfg
         self.num_slots, self.max_len = num_slots, max_len
         self.scfg = scfg or SamplerConfig()
         self.layout, self.block_size, self.chunk = layout, block_size, chunk
         self.max_blocks = kv_pool.blocks_for(max_len, block_size)
         self.num_blocks = num_blocks or num_slots * self.max_blocks
+        self.faults = faults
         self.allocator = (
-            kv_pool.BlockAllocator(self.num_blocks)
+            kv_pool.BlockAllocator(
+                self.num_blocks,
+                fail_hook=faults.on_alloc if faults is not None else None,
+            )
             if layout == "paged" else None
         )
         self._clock = clock
         self._now = 0.0  # virtual clock (chunk ticks) when clock is None
         self.host_transfers = 0
         self.preemptions = 0
+        # backpressure / robustness counters (cumulative over the engine)
+        self.max_queue, self.overload_policy = max_queue, overload_policy
+        self.watchdog_steps = watchdog_steps
+        self.shed_requests = 0
+        self.rejected_requests = 0
+        self.deadline_misses = 0
+        self.quarantined = 0
+        self.queue_peak = 0
+        self.tokens_generated = 0
+        self.prefill_tokens = 0
+        self.admissions = 0
+        self._stall_steps = 0
+        self._step_idx = 0
 
-        self._queue: list[Request] = []
+        self._queue: collections.deque[Request] = collections.deque()
+        # zero-token finishes produced outside step() (shed/rejected at
+        # submit); drained into the next step's return value so every
+        # request still finishes exactly once through the same channel
+        self._pending_finished: list[FinishedRequest] = []
         self._slots: list[Optional[RequestState]] = [None] * num_slots
         self._uid_counter = 0  # monotonic: uids never recycle
         self._stop_set = set(int(t) for t in self.scfg.stop_tokens)
@@ -521,9 +656,10 @@ class ContinuousBatchingEngine:
         # one-shot admission: exact-length prefill retraces per prompt
         # length; where parity allows it (_bucketed_prefill_safe),
         # admission right-pads prompts to power-of-two buckets so one
-        # trace covers a whole bucket
+        # trace covers a whole bucket.  Both return packed [tok, valid]
+        # so prefill quarantine rides the admission fetch.
         self._prefill = jax.jit(
-            _make_prefill_fn(cfg, max_len, self.scfg)
+            _make_checked_prefill_fn(cfg, max_len, self.scfg)
         )
         self._prefill_bucketed = (
             jax.jit(_make_bucketed_prefill_fn(cfg, max_len, self.scfg))
@@ -535,6 +671,10 @@ class ContinuousBatchingEngine:
         self._chunk_fn = jax.jit(
             _make_cb_chunk_fn(cfg, self.scfg, chunk), donate_argnums=(1, 2)
         )
+        # fault-injection variant (extra poison-step operand): compiled
+        # lazily and only when a FaultInjector schedules a logit poison,
+        # so the fault-free build never traces it
+        self._chunk_fn_poison: Optional[Callable] = None
         self._install_fns: dict[int, Callable] = {}
         self._set_tables = jax.jit(_make_set_tables_fn(cfg), donate_argnums=(0,))
         self._admit_jit = jax.jit(_admit_state, donate_argnums=(0,))
@@ -599,10 +739,20 @@ class ContinuousBatchingEngine:
         seed: int = 0,
         uid: Optional[int] = None,
         arrival: float = 0.0,
+        deadline: Optional[float] = None,
+        ttft_budget: Optional[float] = None,
     ) -> int:
-        """Queue a request; returns its uid.  Validates that the request
-        can ever fit: prompt + budget within a slot's capacity, and (paged)
-        within the whole pool."""
+        """Queue a request; returns its uid.
+
+        Requests that can *never* be served — prompt + budget beyond a
+        slot's capacity, or (paged) beyond the whole pool — raise
+        :class:`InadmissibleRequest` here instead of deferring the
+        impossibility to a later scheduler stall.  A ``deadline`` already
+        unmeetable at submit (``deadline <= arrival``, or a non-positive
+        ``ttft_budget``) finishes immediately with reason ``"rejected"``;
+        a full bounded queue invokes the overload policy and the shed
+        request finishes with reason ``"shed"`` (both surface on the next
+        ``step``/``run`` — every request finishes exactly once)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         budget = (
             self.scfg.max_new_tokens if max_new_tokens is None
@@ -614,41 +764,110 @@ class ContinuousBatchingEngine:
             raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
         total = len(prompt) + budget
         if total > self.max_len:
-            raise ValueError(
+            raise InadmissibleRequest(
                 f"prompt ({len(prompt)}) + budget ({budget}) exceeds the "
                 f"slot capacity max_len={self.max_len}"
             )
         if self.allocator is not None:
             need = kv_pool.blocks_for(total, self.block_size)
             if need > self.num_blocks:
-                raise ValueError(
+                raise InadmissibleRequest(
                     f"request needs {need} blocks but the pool has only "
                     f"{self.num_blocks}"
                 )
         if uid is None:
             uid = self._uid_counter
         self._uid_counter = max(self._uid_counter, uid + 1)
-        self._queue.append(
-            Request(uid, prompt, budget, seed=seed, arrival=arrival)
+        if self.faults is not None:
+            arrival += self.faults.arrival_delay(uid)
+        req = Request(
+            uid, prompt, budget, seed=seed, arrival=arrival,
+            deadline=deadline, ttft_budget=ttft_budget,
         )
+        if (deadline is not None and deadline <= arrival) or (
+            ttft_budget is not None and ttft_budget <= 0
+        ):
+            self.rejected_requests += 1
+            self._pending_finished.append(
+                self._finish_unstarted(req, "rejected")
+            )
+            return uid
+        if (
+            self.max_queue is not None
+            and len(self._queue) >= self.max_queue
+        ):
+            if self.overload_policy == "reject":
+                self.shed_requests += 1
+                self._pending_finished.append(
+                    self._finish_unstarted(req, "shed")
+                )
+                return uid
+            victim = self._queue.popleft()  # shed_oldest: O(1) on the deque
+            self.shed_requests += 1
+            self._pending_finished.append(
+                self._finish_unstarted(victim, "shed")
+            )
+        self._queue.append(req)
+        self.queue_peak = max(self.queue_peak, len(self._queue))
         return uid
+
+    def _finish_unstarted(
+        self, req: Request, reason: str
+    ) -> FinishedRequest:
+        """A zero-token finish for a request that never reached a slot
+        (shed / rejected / deadline while queued / prefill quarantine)."""
+        assert reason in FINISH_REASONS, reason
+        now = self.now()
+        return FinishedRequest(
+            req.uid, np.zeros((0,), np.int32), reason, len(req.prompt),
+            req.arrival, now, now, now,
+        )
 
     def run(self) -> list[FinishedRequest]:
         """Process the queue to completion; FinishedRequests in completion
         order."""
         finished: list[FinishedRequest] = []
-        while self._queue or self._live():
+        while self._queue or self._live() or self._pending_finished:
             finished.extend(self.step())
         return finished
 
     def step(self) -> list[FinishedRequest]:
-        """One scheduling tick, spending one token budget: admit arrived
-        requests, advance at most one admitting prompt by one prefill
-        slice (chunked prefill), ensure pool blocks for the coming chunk,
-        run one compiled decode chunk for the decoding slots, evict
-        finished requests.  Returns the requests that finished this
-        tick."""
-        finished = list(self._admit_arrived())
+        """One scheduling tick, spending one token budget: surface pending
+        zero-token finishes, enforce deadlines, apply injected
+        preemptions, admit arrived requests, advance at most one admitting
+        prompt by one prefill slice (chunked prefill), ensure pool blocks
+        for the coming chunk, run one compiled decode chunk for the
+        decoding slots, evict finished requests.  Returns the requests
+        that finished this tick.
+
+        Watchdog: a step that finishes nothing, generates no token and
+        advances no prefill while work is ready (live slots, or an
+        arrived queued request) counts toward ``watchdog_steps``;
+        exceeding it raises :class:`SchedulerStall` with the full
+        scheduler state in the message instead of spinning forever."""
+        before = (self.tokens_generated, self.prefill_tokens)
+        finished = self._step_body()
+        self._step_idx += 1
+        progressed = bool(finished) or (
+            (self.tokens_generated, self.prefill_tokens) != before
+        )
+        now = self.now()
+        work_ready = bool(self._live()) or any(
+            r.arrival <= now for r in self._queue
+        )
+        if progressed or not work_ready:
+            self._stall_steps = 0
+        else:
+            self._stall_steps += 1
+            if self._stall_steps >= self.watchdog_steps:
+                raise SchedulerStall(self._stall_report())
+        return finished
+
+    def _step_body(self) -> list[FinishedRequest]:
+        finished = self._drain_pending()
+        finished.extend(self._expire_deadlines())
+        self._injected_preemptions()
+        finished.extend(self._admit_arrived())
         finished.extend(self._prefill_tick())
         if not any(rs.n_generated > 0 for rs in self._live()):
             if self._live():
@@ -665,6 +884,93 @@ class ContinuousBatchingEngine:
         if self._clock is None:
             self._now += 1.0
         finished.extend(self._process_chunk(packed))
+        return finished
+
+    def _drain_pending(self) -> list[FinishedRequest]:
+        out, self._pending_finished = self._pending_finished, []
+        return out
+
+    def _stall_report(self) -> str:
+        live = [
+            f"(uid={rs.request.uid} slot={rs.slot} ngen={rs.n_generated} "
+            f"prefilled={rs.prefilled}/{len(rs.request.prompt)} "
+            f"blocks={len(rs.blocks)})"
+            for rs in self._live()
+        ]
+        alloc = (
+            f"{self.allocator.free_count}/{self.num_blocks} blocks free"
+            if self.allocator is not None else "dense layout (no allocator)"
+        )
+        return (
+            f"scheduler made no progress for {self._stall_steps} steps "
+            f"(step {self._step_idx}, t={self.now():.3f}): queue depth "
+            f"{len(self._queue)}, live slots [{', '.join(live) or 'none'}], "
+            f"{alloc}, preemptions={self.preemptions}"
+        )
+
+    def _injected_preemptions(self) -> None:
+        """Apply any FaultInjector-scheduled preemptions for this step
+        (chunk boundary) — the same ``_preempt`` path pool pressure
+        takes."""
+        if self.faults is None:
+            return
+        for uid in self.faults.preempt_uids(self._step_idx):
+            live = self._live()
+            if not live:
+                return
+            rs = (
+                max(live, key=lambda r: r.admitted_at) if uid is None
+                else next((r for r in live if r.request.uid == uid), None)
+            )
+            if rs is not None:
+                self.faults.injected["force_preempt"] += 1
+                self._preempt(rs)
+
+    def _deadline_missed(self, req: Request, now: float,
+                         has_first: bool) -> bool:
+        if req.deadline is not None and now > req.deadline:
+            return True
+        return (
+            not has_first
+            and req.ttft_budget is not None
+            and now > req.arrival + req.ttft_budget
+        )
+
+    def _expire_deadlines(self) -> list[FinishedRequest]:
+        """Chunk-boundary deadline enforcement: expired queued requests
+        finish with zero tokens; expired live requests are evicted with
+        their partial stream (a prefix of the fault-free stream — the
+        scheduler is deterministic per request) and their blocks
+        reclaimed, including slots still mid-chunked-prefill."""
+        now = self.now()
+        finished: list[FinishedRequest] = []
+        if any(r.deadline is not None or r.ttft_budget is not None
+               for r in self._queue):
+            keep: collections.deque[Request] = collections.deque()
+            for r in self._queue:
+                if self._deadline_missed(r, now, has_first=False):
+                    self.deadline_misses += 1
+                    finished.append(self._finish_unstarted(r, "deadline"))
+                else:
+                    keep.append(r)
+            self._queue = keep
+        for rs in list(self._live()):
+            req = rs.request
+            if not self._deadline_missed(req, now, rs.n_generated > 0):
+                continue
+            self.deadline_misses += 1
+            if rs.n_generated > 0:  # admitting slots were never activated
+                self._state = self._deactivate_jit(
+                    self._state, jnp.asarray(rs.slot)
+                )
+            if rs.blocks:
+                self.allocator.free(rs.blocks)
+            self._slots[rs.slot] = None
+            finished.append(FinishedRequest(
+                req.uid, np.asarray(rs.tokens, np.int32), "deadline",
+                len(req.prompt), req.arrival, rs.admitted_at,
+                rs.first_token_at if rs.n_generated > 0 else now, now,
+            ))
         return finished
 
     # -- scheduling internals ----------------------------------------------
@@ -693,18 +999,19 @@ class ContinuousBatchingEngine:
             free = [i for i, rs in enumerate(self._slots) if rs is None]
             if not free:
                 break
-            ready = [r for r in self._queue if r.arrival <= self.now()]
-            if not ready:
+            req = self._pop_ready()
+            if req is None:
                 break
-            req = ready[0]
             blocks: list[int] = []
             if self.allocator is not None:
                 nb = kv_pool.blocks_for(len(req.prompt), self.block_size)
                 got = self.allocator.alloc(nb)
                 if got is None:
-                    break  # pool full: wait for evictions, don't preempt
+                    # pool full: requeue at the head, wait for evictions
+                    self._queue.appendleft(req)
+                    break
                 blocks = got
-            self._queue.remove(req)
+            self.admissions += 1
             if self.prefill_chunk is not None:
                 self._admit_chunked(req, free[0], blocks)
             else:
@@ -712,6 +1019,19 @@ class ContinuousBatchingEngine:
                 if done is not None:
                     finished.append(done)
         return finished
+
+    def _pop_ready(self) -> Optional[Request]:
+        """Pop the first queued request that has arrived.  The head case is
+        the O(1) fast path; the scan only happens when arrival delays have
+        put an unarrived request in front of an arrived one."""
+        now = self.now()
+        for i, r in enumerate(self._queue):
+            if r.arrival <= now:
+                if i == 0:
+                    return self._queue.popleft()
+                del self._queue[i]
+                return r
+        return None
 
     def _admit_chunked(self, req: Request, slot: int, blocks: list[int]):
         """Occupy a slot without running prefill: install the slot's block
@@ -764,17 +1084,31 @@ class ContinuousBatchingEngine:
             jnp.asarray(rs.slot, jnp.int32), jax.random.PRNGKey(req.seed),
         )
         rs.prefilled += n
+        self.prefill_tokens += n
         if rs.prefilled < s:
             return []
-        tok0 = int(self._fetch(tok_d))  # one scalar per admission
+        # one packed [tok0, finite] fetch per admission — validity rides
+        # the transfer that was already happening
+        arr = self._fetch(tok_d)
+        tok0, ok = int(arr[0]), bool(arr[1])
         now = self.now()
+        if not ok:
+            self.quarantined += 1
+            if rs.blocks:
+                self.allocator.free(rs.blocks)
+            self._slots[rs.slot] = None
+            return [FinishedRequest(
+                req.uid, np.zeros((0,), np.int32), "error", s,
+                req.arrival, rs.admitted_at, now, now,
+            )]
+        self.tokens_generated += 1
         done = self._finish_at_admission(req, tok0, rs.blocks,
                                          rs.admitted_at)
         if done is not None:
             self._slots[rs.slot] = None
             return [done]
         self._state = self._admit_jit(
-            self._state, jnp.asarray(rs.slot), tok_d, key_d,
+            self._state, jnp.asarray(rs.slot), tok_d[0], key_d,
             jnp.asarray(s, jnp.int32),
             jnp.asarray(req.max_new_tokens, jnp.int32),
         )
@@ -833,8 +1167,19 @@ class ContinuousBatchingEngine:
         self, req: Request, slot: int, blocks: list[int]
     ) -> Optional[FinishedRequest]:
         tok0_d, small, pos0, key = self._admission_prefill(req)
-        tok0 = int(self._fetch(tok0_d)[0])  # one scalar per admission
+        # one packed [tok0, finite] fetch per admission
+        arr = self._fetch(tok0_d)
+        tok0, ok = int(arr[0]), bool(arr[1])
         now = self.now()
+        if not ok:
+            self.quarantined += 1
+            if blocks:
+                self.allocator.free(blocks)
+            return FinishedRequest(
+                req.uid, np.zeros((0,), np.int32), "error",
+                len(req.prompt), req.arrival, now, now, now,
+            )
+        self.tokens_generated += 1
         done = self._finish_at_admission(req, tok0, blocks, now)
         if done is not None:
             return done
@@ -880,9 +1225,10 @@ class ContinuousBatchingEngine:
                 if got is None:
                     victim = self._pick_victim()
                     if victim is None:
-                        raise RuntimeError(
+                        raise SchedulerStall(
                             "KV pool exhausted and nothing to preempt — "
-                            "pool too small for the admitted working set"
+                            "pool too small for the admitted working set: "
+                            + self._stall_report()
                         )
                     self._preempt(victim)
                     if victim is rs:
@@ -914,30 +1260,72 @@ class ContinuousBatchingEngine:
         if rs.blocks:
             self.allocator.free(rs.blocks)
         self._slots[rs.slot] = None
-        self._queue.insert(0, rs.request)
+        self._queue.appendleft(rs.request)
 
     def _run_chunk(self):
-        packed, self._caches, self._state = self._chunk_fn(
-            self.params, self._caches, self._state
-        )
+        """Run one compiled decode chunk.  If the fault injector has a
+        logit poison landing inside this chunk for a live decoding slot,
+        dispatch the lazily-compiled poisoning variant instead — the
+        fault-free program is never recompiled or perturbed."""
+        poison = None
+        if self.faults is not None and self.faults.has_poison:
+            spec = np.full((self.num_slots,), -1, np.int32)
+            hit = False
+            for rs in self._live():
+                if rs.done or rs.n_generated == 0:
+                    continue
+                g = self.faults.poison_rel_step(
+                    rs.request.uid, rs.n_generated, self.chunk
+                )
+                if g is not None:
+                    spec[rs.slot] = g
+                    hit = True
+            if hit:
+                poison = jnp.asarray(spec)
+        if poison is not None:
+            if self._chunk_fn_poison is None:
+                self._chunk_fn_poison = jax.jit(
+                    _make_cb_chunk_fn(
+                        self.cfg, self.scfg, self.chunk, poison=True
+                    ),
+                    donate_argnums=(1, 2),
+                )
+            packed, self._caches, self._state = self._chunk_fn_poison(
+                self.params, self._caches, self._state, poison
+            )
+        else:
+            packed, self._caches, self._state = self._chunk_fn(
+                self.params, self._caches, self._state
+            )
         return packed
 
     def _process_chunk(self, packed: np.ndarray) -> list[FinishedRequest]:
         """Mirror the device's per-step lifecycle over the fetched token
-        matrix, then evict finished slots and reclaim their blocks."""
-        steps = packed.shape[1] - 1
+        matrix, then evict finished slots and reclaim their blocks.
+
+        ``packed`` is ``[tokens (chunk cols) | active | quarantine]``; a
+        quarantine entry < chunk marks the scan step whose logits went
+        non-finite — that slot finishes with ``reason="error"`` at that
+        step and its later columns are ignored."""
+        steps = packed.shape[1] - 2
+        quar_col = packed[:, -1]
         for step in range(steps):
             for rs in self._live():
                 if rs.done or rs.n_generated == 0:
                     continue  # finished, or still admitting (no decode)
+                if int(quar_col[rs.slot]) == step:
+                    rs.done, rs.finish_reason = True, "error"
+                    self.quarantined += 1
+                    continue
                 tok = int(packed[rs.slot, step])
                 rs.tokens.append(tok)
                 rs.n_generated += 1
+                self.tokens_generated += 1
                 if tok in self._stop_set:
                     rs.done, rs.finish_reason = True, "stop"
                 elif rs.n_generated >= rs.request.max_new_tokens:
                     rs.done, rs.finish_reason = True, "length"
-        device_active = packed[:, -1].astype(bool)
+        device_active = packed[:, -2].astype(bool)
         finished = []
         now = self.now()
         for rs in self._live():

@@ -33,6 +33,19 @@ def test_bench_serving_smoke(capsys):
     derived = by_name["serving/pool"].split(",", 2)[2]
     fields = dict(kv.split("=") for kv in derived.split(";"))
     assert fields["blocks"] == fields["free"]
+    # overload row: graceful-degradation stats under 2x-capacity load
+    assert "serving/overload" in names
+    ofields = dict(
+        kv.split("=")
+        for kv in by_name["serving/overload"].split(",", 2)[2].split(";")
+    )
+    assert {"tok_s", "shed_rate", "deadline_miss_rate",
+            "served_rate"} <= set(ofields)
+    for k in ("shed_rate", "deadline_miss_rate", "served_rate"):
+        assert 0.0 <= float(ofields[k]) <= 1.0
+    # the overload run leaks no pool blocks either
+    free, total = ofields["free_blocks"].split("/")
+    assert free == total
     # long-context read-path comparison: both paths report decode tok/s,
     # the kernel row carries the ratio, and greedy streams agree between
     # the Pallas kernel and the gather+SDPA fallback

@@ -104,6 +104,19 @@ class TestBlockAllocator:
 
         run()
 
+    def test_fail_hook_forces_exhaustion_semantics(self):
+        """The fault-injection seam: a firing hook makes ``alloc`` return
+        None with NO state change (exactly the pool-exhausted contract);
+        a quiet hook is invisible."""
+        calls = iter([True, False])
+        a = kv_pool.BlockAllocator(4, fail_hook=lambda: next(calls))
+        assert a.alloc(2) is None  # forced failure
+        assert a.free_count == 4  # took nothing
+        got = a.alloc(2)  # hook quiet: normal alloc
+        assert len(got) == 2 and a.free_count == 2
+        a.free(got)
+        assert a.free_count == 4
+
     def test_random_alloc_free_preempt_traces_seeded(self):
         """Seeded-random sweep through the same invariant driver so the
         property is exercised even where hypothesis isn't installed."""

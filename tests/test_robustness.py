@@ -1,0 +1,358 @@
+"""Request-lifecycle hardening: typed admission errors, deadline / TTFT
+enforcement (queued, mid-decode and mid-chunked-prefill), bounded-queue
+load shedding under both overload policies, the pool-full admission wait
+path, NaN/Inf logit quarantine (prefill and decode), and the no-progress
+watchdog."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.quantization import QuantConfig
+from repro.models import api
+from repro.serve.engine import DecodeEngine, SamplerConfig
+from repro.serve.faults import AllocFailure, FaultInjector, PoisonLogits
+from repro.serve.scheduler import (
+    FINISH_REASONS,
+    ContinuousBatchingEngine,
+    InadmissibleRequest,
+    SchedulerStall,
+)
+
+KEY = jax.random.PRNGKey(1)
+QC = QuantConfig(mode="pquant", r=16, num_experts=1)
+CFG = ModelConfig(name="t", family="decoder", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=48, vocab_size=64, quant=QC)
+SWA_CFG = ModelConfig(name="t2", family="decoder", n_layers=6, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=48, vocab_size=64,
+                      quant=QC, attn_type="swa", window_size=4,
+                      global_every=3, rope_theta_local=1e3)
+MAX_LEN = 32
+SCFG = SamplerConfig(temperature=0.7, top_k=10, max_new_tokens=6)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_model(KEY, CFG)[0]
+
+
+@pytest.fixture(scope="module")
+def reference(params):
+    return DecodeEngine(params, CFG, MAX_LEN)
+
+
+def _prompt(seed, n):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, 64), np.int32
+    )
+
+
+def _oracle(reference, prompt, budget, seed):
+    scfg = dataclasses.replace(SCFG, max_new_tokens=budget)
+    return reference.generate(jnp.asarray(prompt[None]), scfg, seed=seed)[0]
+
+
+# ---------------------------------------------------------------------------
+# typed admission errors (no compile: rejected before any jit runs)
+# ---------------------------------------------------------------------------
+
+
+class TestInadmissibleRequest:
+    def test_slot_capacity(self, params):
+        eng = ContinuousBatchingEngine(
+            params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+            layout="dense", chunk=4,
+        )
+        with pytest.raises(InadmissibleRequest, match="slot capacity"):
+            eng.submit(_prompt(0, 30), max_new_tokens=10)
+        # subclasses ValueError: callers catching the old type still work
+        assert issubclass(InadmissibleRequest, ValueError)
+
+    def test_pool_capacity(self, params):
+        eng = ContinuousBatchingEngine(
+            params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+            layout="paged", block_size=8, num_blocks=1, chunk=4,
+        )
+        with pytest.raises(InadmissibleRequest, match="pool has only"):
+            eng.submit(_prompt(0, 10), max_new_tokens=4)
+
+    def test_dead_on_arrival_is_rejected_not_raised(self, params):
+        """A deadline unmeetable at submit is a *request* outcome
+        (reason "rejected"), not an API error — the request still
+        finishes exactly once, with zero tokens, via the next step."""
+        eng = ContinuousBatchingEngine(
+            params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+            layout="dense", chunk=4,
+        )
+        uid = eng.submit(_prompt(0, 4), max_new_tokens=4, arrival=5.0,
+                         deadline=5.0)
+        uid2 = eng.submit(_prompt(1, 4), max_new_tokens=4, ttft_budget=0.0)
+        finished = eng.run()
+        assert sorted(f.uid for f in finished) == sorted([uid, uid2])
+        for f in finished:
+            assert f.finish_reason == "rejected"
+            assert len(f.tokens) == 0
+        assert eng.rejected_requests == 2
+
+
+# ---------------------------------------------------------------------------
+# bounded queue / load shedding
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_reject_policy(params, reference):
+    """Queue bound 2, policy "reject": the third concurrent submit is shed
+    with zero tokens, the two queued requests run to their unchanged
+    streams, and every request finishes exactly once with a valid
+    reason."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+        layout="paged", block_size=8, chunk=4,
+        max_queue=2, overload_policy="reject",
+    )
+    for uid in (0, 1, 2):
+        eng.submit(_prompt(uid + 10, 4), max_new_tokens=6, seed=uid, uid=uid)
+    finished = eng.run()
+    by_uid = {f.uid: f for f in finished}
+    assert sorted(by_uid) == [0, 1, 2]
+    assert by_uid[2].finish_reason == "shed"
+    assert len(by_uid[2].tokens) == 0
+    for uid in (0, 1):
+        assert by_uid[uid].finish_reason in FINISH_REASONS
+        np.testing.assert_array_equal(
+            by_uid[uid].tokens, _oracle(reference, _prompt(uid + 10, 4), 6, uid)
+        )
+    assert eng.shed_requests == 1 and eng.queue_peak == 2
+    assert eng.allocator.free_count == eng.num_blocks
+
+
+def test_bounded_queue_shed_oldest_policy(params, reference):
+    """Policy "shed_oldest": the head of the queue is dropped to make room
+    (freshest-work-wins); the survivor's stream is bit-for-bit the
+    fault-free one."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+        layout="dense", chunk=4,
+        max_queue=1, overload_policy="shed_oldest",
+    )
+    eng.submit(_prompt(10, 4), max_new_tokens=6, seed=0, uid=0)
+    eng.submit(_prompt(11, 3), max_new_tokens=6, seed=1, uid=1)
+    finished = eng.run()
+    by_uid = {f.uid: f for f in finished}
+    assert by_uid[0].finish_reason == "shed" and len(by_uid[0].tokens) == 0
+    np.testing.assert_array_equal(
+        by_uid[1].tokens, _oracle(reference, _prompt(11, 3), 6, 1)
+    )
+    assert eng.shed_requests == 1
+
+
+def test_overload_policy_validated(params):
+    with pytest.raises(ValueError, match="overload policy"):
+        ContinuousBatchingEngine(
+            params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+            overload_policy="drop_all",
+        )
+    with pytest.raises(ValueError, match="max_queue"):
+        ContinuousBatchingEngine(
+            params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+            max_queue=0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# deadlines / TTFT budgets
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_evicts_mid_decode_with_prefix_stream(params, reference):
+    """A live request whose deadline passes at a chunk boundary is evicted
+    with reason "deadline"; its partial tokens are a strict prefix of the
+    fault-free stream and its blocks are reclaimed."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+        layout="paged", block_size=8, chunk=4,
+    )
+    eng.submit(_prompt(10, 5), max_new_tokens=12, seed=0, uid=0,
+               deadline=1.5)
+    (f,) = eng.run()
+    assert f.finish_reason == "deadline"
+    full = _oracle(reference, _prompt(10, 5), 12, 0)
+    assert 0 < len(f.tokens) < len(full)
+    np.testing.assert_array_equal(f.tokens, full[: len(f.tokens)])
+    assert eng.deadline_misses == 1
+    assert eng.allocator.free_count == eng.num_blocks
+
+
+def test_ttft_budget_expires_in_queue(params, reference):
+    """A queued request whose TTFT budget lapses before a slot frees
+    finishes "deadline" with zero tokens; the running request is
+    untouched."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+        layout="dense", chunk=4,
+    )
+    eng.submit(_prompt(10, 5), max_new_tokens=8, seed=0, uid=0)
+    eng.submit(_prompt(11, 4), max_new_tokens=8, seed=1, uid=1,
+               ttft_budget=1.0)
+    finished = eng.run()
+    by_uid = {f.uid: f for f in finished}
+    assert by_uid[1].finish_reason == "deadline"
+    assert len(by_uid[1].tokens) == 0
+    assert by_uid[1].first_token_at == by_uid[1].finished_at
+    np.testing.assert_array_equal(
+        by_uid[0].tokens, _oracle(reference, _prompt(10, 5), 8, 0)
+    )
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_deadline_expiry_during_chunked_admission_prefill(params, layout):
+    """The satellite case: a request evicted while its prompt is still
+    streaming in (prefilled < prompt_len).  The mid-prefill slot must be
+    vacated and — under the paged layout — its prompt blocks reclaimed at
+    the expiry step, not at some later finish."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+        layout=layout, block_size=8, chunk=4, prefill_chunk=2,
+    )
+    eng.submit(_prompt(10, 7), max_new_tokens=4, seed=0, uid=0,
+               deadline=1.5)
+    finished = list(eng.step())  # slice 1 of 4: occupies slot + 1 block
+    (rs,) = eng._live()
+    assert 0 < rs.prefilled < 7 and rs.n_generated == 0
+    if layout == "paged":
+        assert eng.allocator.free_count == eng.num_blocks - 1
+    finished += eng.step()  # slice 2; clock passes the deadline
+    finished += eng.step()  # expiry fires at the chunk boundary
+    assert [f.finish_reason for f in finished] == ["deadline"]
+    assert len(finished[0].tokens) == 0
+    assert eng._live() == []
+    if layout == "paged":
+        # mid-prefill reclamation: the blocks came back at expiry
+        assert eng.allocator.free_count == eng.num_blocks
+    assert not eng.run()  # nothing left; the finish happened exactly once
+
+
+# ---------------------------------------------------------------------------
+# pool-full admission path ("wait for evictions")
+# ---------------------------------------------------------------------------
+
+
+def test_pool_full_admission_waits_for_evictions(params, reference):
+    """With a free slot but an exhausted pool, admission WAITS (requeue at
+    head) instead of preempting the pool's owner; the waiter admits after
+    the eviction and still produces its exact stream."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+        layout="paged", block_size=8, num_blocks=3, chunk=4,
+    )
+    eng.submit(_prompt(10, 9), max_new_tokens=8, seed=0, uid=0)
+    eng.submit(_prompt(11, 9), max_new_tokens=4, seed=1, uid=1)
+    finished = eng.run()
+    assert [f.uid for f in finished] == [0, 1]  # 1 admitted only after 0
+    assert eng.preemptions == 0  # waited, never preempted the owner
+    np.testing.assert_array_equal(
+        finished[0].tokens, _oracle(reference, _prompt(10, 9), 8, 0)
+    )
+    np.testing.assert_array_equal(
+        finished[1].tokens, _oracle(reference, _prompt(11, 9), 4, 1)
+    )
+    assert eng.allocator.free_count == 3
+
+
+# ---------------------------------------------------------------------------
+# NaN/Inf quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_decode_poison_quarantines_only_the_poisoned_stream(
+    params, reference
+):
+    """An injected non-finite logit step finishes that request with reason
+    "error" carrying exactly its pre-poison prefix, while the other live
+    stream is bit-for-bit the fault-free run."""
+    inj = FaultInjector([PoisonLogits(uid=0, gen_index=3)])
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+        layout="paged", block_size=8, chunk=4, faults=inj,
+    )
+    eng.submit(_prompt(10, 5), max_new_tokens=6, seed=0, uid=0)
+    eng.submit(_prompt(11, 4), max_new_tokens=6, seed=1, uid=1)
+    finished = eng.run()
+    by_uid = {f.uid: f for f in finished}
+    assert by_uid[0].finish_reason == "error"
+    full = _oracle(reference, _prompt(10, 5), 6, 0)
+    assert len(by_uid[0].tokens) == 3  # gen indices 0..2 survive
+    np.testing.assert_array_equal(by_uid[0].tokens, full[:3])
+    np.testing.assert_array_equal(
+        by_uid[1].tokens, _oracle(reference, _prompt(11, 4), 6, 1)
+    )
+    assert eng.quarantined == 1
+    assert inj.injected["poison_logits"] == 1
+    assert eng.allocator.free_count == eng.num_blocks
+
+
+@pytest.mark.parametrize(
+    "cfg,prefill_chunk",
+    [(CFG, None), (CFG, 3), (SWA_CFG, None)],
+    ids=["bucketed", "chunked", "exact"],
+)
+def test_prefill_poison_quarantines_at_admission(cfg, prefill_chunk):
+    """Non-finite logits at admission prefill (a poisoned embedding row)
+    finish the request "error" with zero tokens and reclaim its blocks —
+    on all three admission paths (bucketed one-shot, chunked slices, and
+    exact-length one-shot for ring-cache configs)."""
+    p = api.init_model(KEY, cfg)[0]
+    bad_tok = 63
+    p = dict(p, embed={"table": p["embed"]["table"].at[bad_tok].set(
+        jnp.nan)})
+    eng = ContinuousBatchingEngine(
+        p, cfg, num_slots=1, max_len=24, scfg=SCFG,
+        layout="paged", block_size=8, chunk=4, prefill_chunk=prefill_chunk,
+    )
+    prompt = np.asarray([1, 2, bad_tok, 3, 4], np.int32)
+    eng.submit(prompt, max_new_tokens=4, seed=0, uid=0)
+    (f,) = eng.run()
+    assert f.finish_reason == "error"
+    assert len(f.tokens) == 0
+    assert eng.quarantined == 1
+    assert eng.allocator.free_count == eng.num_blocks
+    assert eng._live() == []
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_raises_diagnosable_stall(params):
+    """An admission that can never proceed (every alloc call failing) must
+    raise SchedulerStall with the queue depth and allocator state in the
+    message — not spin forever."""
+    inj = FaultInjector([AllocFailure(i) for i in range(64)])
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+        layout="paged", block_size=8, chunk=4,
+        watchdog_steps=4, faults=inj,
+    )
+    eng.submit(_prompt(10, 4), max_new_tokens=4, seed=0, uid=0)
+    with pytest.raises(SchedulerStall, match="queue depth 1"):
+        eng.run()
+    assert issubclass(SchedulerStall, RuntimeError)
+
+
+def test_watchdog_tolerates_idle_waiting(params):
+    """No-progress steps while nothing has arrived are NOT a stall: the
+    virtual clock advances to the next arrival and the request is still
+    served."""
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=1, max_len=MAX_LEN, scfg=SCFG,
+        layout="dense", chunk=4, watchdog_steps=2,
+    )
+    eng.submit(_prompt(10, 4), max_new_tokens=4, seed=0, uid=0,
+               arrival=100.0)
+    finished = eng.run()
+    assert [f.finish_reason for f in finished] == ["length"]
