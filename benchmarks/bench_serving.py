@@ -43,16 +43,25 @@ Rows (``name,us_per_call,derived`` — us_per_call is p50 request latency):
 Every serving row carries tok_s (useful tokens over the trace makespan),
 request-latency p50/p95, TTFT (time-to-first-token) p50/p95 and p95
 inter-token latency, so one CSV captures throughput, tail latency AND the
-decode-cadence story chunked prefill is about.  The trace always includes
-at least one long prompt — that is the request that freezes the
-no-chunking decode cadence.  ``--smoke`` shrinks the trace to a
-seconds-scale CI subset (compile-dominated: the numbers are a wiring
+decode-cadence story chunked prefill is about.  The continuous-tier rows
+source their latency percentiles from the ENGINE's own metrics snapshot
+(the ``ttft_seconds`` / ``itl_seconds`` / ``request_latency_seconds``
+histograms) rather than recomputing them host-side, and the overload row
+reads ``finished_by_reason`` — the bench measures what the engine reports,
+with a cross-check assert that the engine's TTFT p50 bucket brackets the
+exactly-computed percentile (guards the histogram wiring).
+``--metrics-out`` / ``--trace-out`` dump the continuous run's snapshot
+(schema-validated) and its structured JSONL request trace.  The trace
+always includes at least one long prompt — that is the request that
+freezes the no-chunking decode cadence.  ``--smoke`` shrinks the trace to
+a seconds-scale CI subset (compile-dominated: the numbers are a wiring
 check there, not a scheduling signal).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -90,6 +99,41 @@ def _latency_fields(lat, ttft, itl):
         f"ttft_p50_ms={_pctl(ttft, 50):.1f};ttft_p95_ms={_pctl(ttft, 95):.1f};"
         f"itl_p95_ms={_pctl(itl, 95):.2f}"
     )
+
+
+def _snapshot_latency_fields(snap):
+    """The same derived-column block sourced from the engine's own metrics
+    snapshot (its TTFT/ITL/latency histograms) instead of host-side
+    recomputation — the engine's telemetry IS the reported number."""
+    h = snap["histograms"]
+    lat = h["request_latency_seconds"]
+    ttft = h["ttft_seconds"]
+    itl = h["itl_seconds"]
+    return (
+        f"p50_ms={lat['p50'] * 1e3:.1f};p95_ms={lat['p95'] * 1e3:.1f};"
+        f"ttft_p50_ms={ttft['p50'] * 1e3:.1f};"
+        f"ttft_p95_ms={ttft['p95'] * 1e3:.1f};"
+        f"itl_p95_ms={itl['p95'] * 1e3:.2f}"
+    )
+
+
+def _check_engine_ttft(eng, ttft_exact) -> None:
+    """Cross-check: the bucket the engine's TTFT histogram puts the p50 in
+    must contain the exactly-computed p50 of the same requests (an
+    inverted-CDF quantile, so both sides name an actual observation).
+    Bucket edges are the honest error bar of a fixed-bucket histogram —
+    this guards the wiring (wrong clock, wrong anchor, missed observe),
+    not sub-bucket resolution."""
+    hist = eng.metrics.histogram("ttft_seconds")
+    exact = float(
+        np.quantile(np.asarray(ttft_exact), 0.5, method="inverted_cdf")
+    )
+    lo, hi = hist.quantile_bounds(0.5)
+    if not lo <= exact <= hi:
+        raise AssertionError(
+            f"engine TTFT p50 bucket ({lo:.6g}, {hi:.6g}] does not contain "
+            f"the bench-computed p50 {exact:.6g}s — histogram wiring broke"
+        )
 
 
 def _run_lockstep(server, trace, num_slots, scfg, t0, pad_to):
@@ -187,12 +231,15 @@ def _run_long_context(params, cfg, num_slots, scfg, trace, block, chunk,
 
 
 def run(smoke: bool = False, num_slots: int | None = None,
-        n_requests: int | None = None, seed: int = 0):
+        n_requests: int | None = None, seed: int = 0,
+        metrics_out: str | None = None, trace_out: str | None = None):
     import jax
     from benchmarks.common import row, tiny_config
     from repro.models import api
     from repro.serve.engine import DecodeEngine, SamplerConfig
+    from repro.serve.metrics import validate_snapshot
     from repro.serve.scheduler import ContinuousBatchingEngine
+    from repro.serve.tracing import JsonlSink, RequestTracer
 
     num_slots = num_slots or (2 if smoke else 4)
     n_requests = n_requests or (6 if smoke else 24)
@@ -230,7 +277,13 @@ def run(smoke: bool = False, num_slots: int | None = None,
     pad_to = max(len(r["prompt"]) for r in trace)
     _run_lockstep(server, warm[: num_slots], num_slots, scfg, t0, pad_to)
     _run_continuous(eng, warm, t0)
-    eng.host_transfers = eng.preemptions = 0
+    # warm-run hygiene: compiled programs stay, every metric (counters,
+    # gauges, the latency histograms the rows are sourced from) zeroes
+    eng.metrics.reset()
+    tracer = None
+    if trace_out is not None:
+        tracer = RequestTracer(JsonlSink(trace_out))
+        eng.tracer = tracer  # attach post-warm: the trace is the timed run
 
     rows = []
     t0 = time.perf_counter()
@@ -244,10 +297,21 @@ def run(smoke: bool = False, num_slots: int | None = None,
 
     box["t0"] = t0 = time.perf_counter()
     clat, cttft, citl, ctoks, cspan, _ = _run_continuous(eng, trace, t0)
+    _check_engine_ttft(eng, cttft)
+    csnap = eng.snapshot()
+    if tracer is not None:
+        eng.tracer = None
+        tracer.close()
+    if metrics_out is not None:
+        validate_snapshot(csnap)
+        with open(metrics_out, "w", encoding="utf-8") as f:
+            json.dump(csnap, f, indent=1, sort_keys=True)
+    c_itl_p95_ms = csnap["histograms"]["itl_seconds"]["p95"] * 1e3
     rows.append(row(
-        "serving/continuous", _pctl(clat, 50) * 1e3,
+        "serving/continuous",
+        csnap["histograms"]["request_latency_seconds"]["p50"] * 1e6,
         f"tok_s={ctoks / cspan:.1f};"
-        + _latency_fields(clat, cttft, citl)
+        + _snapshot_latency_fields(csnap)
         + f";p50_speedup={_pctl(lat, 50) / max(_pctl(clat, 50), 1e-9):.2f}x",
     ))
     rows.append(row(
@@ -264,14 +328,20 @@ def run(smoke: bool = False, num_slots: int | None = None,
     )
     box["t0"] = time.perf_counter()
     _run_continuous(ceng, [dict(r, arrival=0.0) for r in warm], box["t0"])
+    ceng.metrics.reset()
     box["t0"] = t0 = time.perf_counter()
     klat, kttft, kitl, ktoks, kspan, _ = _run_continuous(ceng, trace, t0)
+    _check_engine_ttft(ceng, kttft)
+    ksnap = ceng.snapshot()
+    k_itl_p95_ms = ksnap["histograms"]["itl_seconds"]["p95"] * 1e3
     rows.append(row(
-        "serving/continuous_chunked", _pctl(klat, 50) * 1e3,
+        "serving/continuous_chunked",
+        ksnap["histograms"]["request_latency_seconds"]["p50"] * 1e6,
         f"tok_s={ktoks / kspan:.1f};"
-        + _latency_fields(klat, kttft, kitl)
+        + _snapshot_latency_fields(ksnap)
         + f";prefill_chunk={prefill_chunk}"
-        + f";itl_p95_vs_continuous={_pctl(citl, 95) / max(_pctl(kitl, 95), 1e-9):.2f}x",
+        + f";itl_p95_vs_continuous="
+        + f"{c_itl_p95_ms / max(k_itl_p95_ms, 1e-9):.2f}x",
     ))
 
     # -- overload: 2x-capacity Poisson load against the robustness layer --
@@ -297,6 +367,7 @@ def run(smoke: bool = False, num_slots: int | None = None,
         oeng.submit(r["prompt"], max_new_tokens=r["budget"], seed=r["seed"],
                     uid=r["uid"], arrival=0.0)
     oeng.run()
+    oeng.metrics.reset()  # warm finishes must not count into the rates
     base = oeng.now()  # the virtual clock keeps ticking across runs
     wall0 = time.perf_counter()
     for r in otrace:
@@ -308,9 +379,13 @@ def run(smoke: bool = False, num_slots: int | None = None,
     ofin = oeng.run()
     wall = time.perf_counter() - wall0
     otoks = sum(len(f.tokens) for f in ofin)
-    shed = sum(f.finish_reason in ("shed", "rejected") for f in ofin)
-    missed = sum(f.finish_reason == "deadline" for f in ofin)
-    served = sum(f.finish_reason in ("stop", "length") for f in ofin)
+    # shed/miss/serve rates come from the engine's own per-reason
+    # counters, not a host-side recount of the FinishedRequest list
+    fbr = oeng.finished_by_reason
+    assert sum(fbr.values()) == len(ofin) == over_n, (fbr, len(ofin))
+    shed = fbr["shed"] + fbr["rejected"]
+    missed = fbr["deadline"]
+    served = fbr["stop"] + fbr["length"]
     rows.append(row(
         "serving/overload", 0.0,
         f"tok_s={otoks / max(wall, 1e-9):.1f};"
@@ -332,12 +407,16 @@ def run(smoke: bool = False, num_slots: int | None = None,
     )
     box["t0"] = time.perf_counter()
     _run_continuous(peng, [dict(r, arrival=0.0) for r in warm], box["t0"])
+    peng.metrics.reset()
     box["t0"] = t0 = time.perf_counter()
     plat, pttft, pitl, ptoks, pspan, _ = _run_continuous(peng, trace, t0)
+    _check_engine_ttft(peng, pttft)
+    psnap = peng.snapshot()
     rows.append(row(
-        "serving/continuous_packed", _pctl(plat, 50) * 1e3,
+        "serving/continuous_packed",
+        psnap["histograms"]["request_latency_seconds"]["p50"] * 1e6,
         f"tok_s={ptoks / pspan:.1f};"
-        + _latency_fields(plat, pttft, pitl)
+        + _snapshot_latency_fields(psnap)
         + f";vs_fakequant_tok_s={ctoks / cspan:.1f}",
     ))
 
@@ -405,10 +484,17 @@ def main():
     ap.add_argument("--num-slots", type=int, default=None)
     ap.add_argument("--n-requests", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the continuous run's schema-validated "
+                         "metrics snapshot (JSON) here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the continuous run's request trace "
+                         "(JSONL, one event per line) here")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(smoke=args.smoke, num_slots=args.num_slots,
-        n_requests=args.n_requests, seed=args.seed)
+        n_requests=args.n_requests, seed=args.seed,
+        metrics_out=args.metrics_out, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

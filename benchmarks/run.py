@@ -69,10 +69,17 @@ def main() -> None:
         "stability": lambda: bench_stability.run(steps=max(80, args.steps // 2)),
     }
     if args.smoke:
+        # the smoke serving run also emits the engine's metrics snapshot
+        # and JSONL request trace next to BENCH_serving.json, so CI can
+        # schema-validate and archive the telemetry alongside the numbers
         suites = {
             "memory": lambda: bench_memory.run(),
             "decode": lambda: bench_decode.run(smoke=True),
-            "serving": lambda: bench_serving.run(smoke=True),
+            "serving": lambda: bench_serving.run(
+                smoke=True,
+                metrics_out="BENCH_serving_metrics.json",
+                trace_out="BENCH_serving_trace.jsonl",
+            ),
         }
     def jsonable(x):
         """Suites return CSV-row lists OR nested result dicts (e.g.

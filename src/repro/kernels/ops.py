@@ -76,6 +76,17 @@ _BK_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
 _BN_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
 
 
+def _annotate(name: str):
+    """Profiler span (``repro.serve.tracing.annotate``) around a kernel
+    dispatch site — host-timeline TraceAnnotation + named_scope so kernel
+    time is attributable by name in a profiler trace.  Imported lazily:
+    the kernel tier stays importable without the serving layer, and the
+    context manager runs at trace time, never per decode step."""
+    from repro.serve.tracing import annotate
+
+    return annotate(name)
+
+
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
@@ -125,7 +136,9 @@ def decode_tiles(m: int, k: int, n: int, op: str = "w1a8_gemv",
     _ensure_tile_cache_loaded()
     cached = _DECODE_TILE_CACHE.get(_tile_key(op, m, k, n, r))
     if cached is not None:
+        tile_cache.record_hit()
         return cached
+    tile_cache.record_miss()
     bk = _largest_divisor(k, _BK_CANDIDATES)
     bn = _largest_divisor(n, _BN_CANDIDATES)
     if r is not None and bn < r:
@@ -163,6 +176,7 @@ def sweep_decode_tiles(
 
     if op == "decoupled_gemv" and r is None:
         raise ValueError("decoupled_gemv sweeps need r (8-bit branch width)")
+    sweep_t0 = time.perf_counter()
     m_p = m + (-m) % 8  # the shape _bit_linear_decode pads to and looks up
     key = _tile_key(op, m_p, k, n, r if op == "decoupled_gemv" else None)
     rng = np.random.default_rng(seed)
@@ -207,6 +221,7 @@ def sweep_decode_tiles(
         best = decode_tiles(m_p, k, n, op=op, r=r)
     _DECODE_TILE_CACHE[key] = best
     tile_cache.store(jax.default_backend(), {key: best})
+    tile_cache.record_sweep_ms((time.perf_counter() - sweep_t0) * 1e3)
     return best
 
 
@@ -236,10 +251,11 @@ def _bit_linear_prefill(xf: Array, w_packed: Array, lam: Array, out_dtype):
     xq, m = _pad_rows(xq, bm)
     gamma_p = _pad_gamma(gamma, bm)
     bk, bn = _prefill_tiles(xf.shape[1], w_packed.shape[1])
-    y = w1a8_matmul(
-        xq, w_packed, gamma_p, lam,
-        bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
-    )
+    with _annotate("kernels/w1a8_matmul"):
+        y = w1a8_matmul(
+            xq, w_packed, gamma_p, lam,
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+        )
     return y[:m]
 
 
@@ -247,10 +263,11 @@ def _bit_linear_decode(xf: Array, w_packed: Array, lam: Array, out_dtype):
     """Decode GEMV path: act-quant fused into the kernel prologue."""
     xp, m = _pad_rows(xf, 8)
     bk, bn = decode_tiles(xp.shape[0], xf.shape[1], w_packed.shape[1])
-    y = w1a8_gemv(
-        xp, w_packed, lam,
-        bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
-    )
+    with _annotate("kernels/w1a8_gemv"):
+        y = w1a8_gemv(
+            xp, w_packed, lam,
+            bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+        )
     return y[:m]
 
 
@@ -283,10 +300,11 @@ def int8_linear_infer(
     xq, m = _pad_rows(xq, bm)
     gamma_p = _pad_gamma(gamma, bm)
     bk, bn = _prefill_tiles(xf.shape[1], w_q.shape[1])
-    y = int8_matmul(
-        xq, w_q, gamma_p, wscale, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-        interpret=not on_tpu(),
-    )
+    with _annotate("kernels/int8_matmul"):
+        y = int8_matmul(
+            xq, w_q, gamma_p, wscale, bm=bm, bk=bk, bn=bn,
+            out_dtype=out_dtype, interpret=not on_tpu(),
+        )
     return y[:m].reshape(*lead, -1)
 
 
@@ -309,10 +327,11 @@ def _decoupled_prefill(
     gamma_p = _pad_gamma(gamma, bm)
     r = w8_q.shape[1]
     bk, bn = _prefill_tiles(xf.shape[1], w1_packed.shape[1], r=r)
-    y1, y8 = decoupled_matmul(
-        xq, w1_packed, w8_q, gamma_p, lam, w8scale, alpha, beta,
-        bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
-    )
+    with _annotate("kernels/decoupled_matmul"):
+        y1, y8 = decoupled_matmul(
+            xq, w1_packed, w8_q, gamma_p, lam, w8scale, alpha, beta,
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+        )
     return y1[:m], y8[:m]
 
 
@@ -322,10 +341,11 @@ def _decoupled_decode(
     xp, m = _pad_rows(xf, 8)
     k, n, r = xf.shape[1], w1_packed.shape[1], w8_q.shape[1]
     bk, bn = decode_tiles(xp.shape[0], k, n, op="decoupled_gemv", r=r)
-    y1, y8 = decoupled_gemv(
-        xp, w1_packed, w8_q, lam, w8scale, alpha, beta,
-        bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
-    )
+    with _annotate("kernels/decoupled_gemv"):
+        y1, y8 = decoupled_gemv(
+            xp, w1_packed, w8_q, lam, w8scale, alpha, beta,
+            bk=bk, bn=bn, out_dtype=out_dtype, interpret=not on_tpu(),
+        )
     return y1[:m], y8[:m]
 
 
@@ -406,7 +426,9 @@ def paged_tiles(
     _ensure_tile_cache_loaded()
     cached = _DECODE_TILE_CACHE.get(("paged_attn", t, hq, hkv, d, bs, mb))
     if cached is not None:
+        tile_cache.record_hit()
         return int(cached[0])
+    tile_cache.record_miss()
     for c in _PAGES_CANDIDATES:
         if c <= mb and mb % c == 0:
             return c
@@ -432,6 +454,7 @@ def sweep_paged_tiles(
     per-backend JSON the GEMV tables use), and return it."""
     import numpy as np
 
+    sweep_t0 = time.perf_counter()
     key = ("paged_attn", t, hq, hkv, d, bs, mb)
     rng = np.random.default_rng(seed)
     nb = 2 * mb
@@ -475,6 +498,7 @@ def sweep_paged_tiles(
         best = paged_tiles(t, hq, hkv, d, bs, mb)
     _DECODE_TILE_CACHE[key] = (best,)
     tile_cache.store(jax.default_backend(), {key: (best,)})
+    tile_cache.record_sweep_ms((time.perf_counter() - sweep_t0) * 1e3)
     return best
 
 
@@ -501,7 +525,8 @@ def paged_attention(
     bs, hkv = kpool.shape[1], kpool.shape[2]
     mb = table.shape[1]
     pages = paged_tiles(t, hq, hkv, d, bs, mb)
-    return _paged_attention(
-        q, kpool, vpool, table, start, kv_lens,
-        pages=pages, scale=scale, interpret=not on_tpu(),
-    )
+    with _annotate("kernels/paged_attention"):
+        return _paged_attention(
+            q, kpool, vpool, table, start, kv_lens,
+            pages=pages, scale=scale, interpret=not on_tpu(),
+        )

@@ -36,6 +36,36 @@ _KEY_SEP = "|"
 
 _log = logging.getLogger(__name__)
 
+# process-wide autotune-cache stats, answering "did this run pay sweep
+# cost or reuse the cache": dispatch-table lookups (hits/misses), sweeps
+# actually run, and milliseconds spent sweeping.  They live here (with the
+# cache) rather than on an engine; the serving metrics registry pulls them
+# in at snapshot time via a collector (``scheduler._tile_cache_stats``).
+_STATS = {"hits": 0, "misses": 0, "sweeps": 0, "sweep_ms": 0.0}
+
+
+def record_hit() -> None:
+    _STATS["hits"] += 1
+
+
+def record_miss() -> None:
+    _STATS["misses"] += 1
+
+
+def record_sweep_ms(ms: float) -> None:
+    _STATS["sweeps"] += 1
+    _STATS["sweep_ms"] += float(ms)
+
+
+def stats() -> dict:
+    """Copy of the process-wide autotune-cache stats."""
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = type(_STATS[k])()
+
 # cache paths whose corruption has already been reported — warn once per
 # path per process, not once per load
 _CORRUPT_WARNED: set[str] = set()

@@ -114,6 +114,51 @@ With ``faults=None`` (default) the hooks are skipped entirely and the
 compiled programs are byte-identical to the fault-free build — the chaos
 suite (``tests/test_chaos.py``) asserts the graceful-degradation
 contract under random schedules in both cache layouts.
+
+Observability tier (:mod:`repro.serve.metrics` +
+:mod:`repro.serve.tracing`) — zero-overhead-when-disabled telemetry
+threaded through the whole stack:
+
+* **Metrics registry** — every engine owns a
+  :class:`~repro.serve.metrics.MetricsRegistry` of typed counters,
+  gauges and fixed-bucket histograms (log-spaced edges, bounded memory —
+  no per-request lists).  ``engine.snapshot()`` returns one plain dict
+  (``validate_snapshot`` pins the schema,
+  ``MetricsRegistry.prometheus_text`` renders the exposition format)
+  covering submissions, per-``finish_reason`` totals, shed / rejection /
+  deadline / quarantine counts, preemptions and restarts, admission-queue
+  depth and batch occupancy, paged-pool block utilization, and
+  engine-computed TTFT / inter-token-latency / request-latency
+  histograms on the engine's own clock — the benchmark reports what the
+  engine measures, not a host-side recount.  Legacy counter attributes
+  (``engine.shed_requests`` etc.) remain as aliases over the registry.
+  Process-wide autotune-cache stats (``kernels.tile_cache``: dispatch
+  hits/misses, sweeps, sweep milliseconds) ride the same snapshot via a
+  registered collector.
+* **Request tracing** — pass a
+  :class:`~repro.serve.tracing.RequestTracer` (``tracer=``) wrapping a
+  :class:`~repro.serve.tracing.JsonlSink` or
+  :class:`~repro.serve.tracing.ListSink` to stream one structured event
+  per lifecycle edge: submitted → block_alloc → admitted →
+  prefill_chunk → first_token → decode_chunk → finished(reason), plus
+  block_free, preempted, stall and fault_* events, all timestamped on
+  the engine clock.  ``tracer=None`` (default) skips every emission.
+* **Profiling hooks** — :func:`~repro.serve.tracing.annotate` brackets
+  the admission-prefill / chunked-prefill / decode-chunk / sample
+  regions (and the kernel dispatch sites in ``kernels.ops``) with
+  ``jax.profiler.TraceAnnotation`` + ``named_scope``; the annotations
+  are applied unconditionally, so enabling or disabling metrics/tracing
+  changes NO compiled program — byte-identical lowering is asserted in
+  ``tests/test_metrics.py``.  Setting ``REPRO_PROFILE_DIR=/path`` wraps
+  engine runs in ``jax.profiler.start_trace``/``stop_trace`` for a
+  loadable device profile.
+
+Clocks: ``clock=None`` keeps the deterministic virtual clock (one tick
+per decode chunk); any ``now()`` callable or a
+:class:`~repro.serve.metrics.ManualClock` /
+:class:`~repro.serve.metrics.MonotonicClock` object supplies real (or
+test-controlled) time, including the drive-loop sleep — tests fake time
+without sleeping.
 """
 
 from repro.serve.engine import (  # noqa: F401
@@ -129,6 +174,12 @@ from repro.serve.faults import (  # noqa: F401
     ForcePreempt,
     PoisonLogits,
 )
+from repro.serve.metrics import (  # noqa: F401
+    ManualClock,
+    MetricsRegistry,
+    MonotonicClock,
+    validate_snapshot,
+)
 from repro.serve.scheduler import (  # noqa: F401
     FINISH_REASONS,
     ContinuousBatchingEngine,
@@ -137,4 +188,11 @@ from repro.serve.scheduler import (  # noqa: F401
     Request,
     RequestState,
     SchedulerStall,
+)
+from repro.serve.tracing import (  # noqa: F401
+    JsonlSink,
+    ListSink,
+    RequestTracer,
+    annotate,
+    maybe_profile,
 )

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import api
+from repro.serve.tracing import annotate, maybe_profile
 
 Array = jax.Array
 
@@ -98,8 +99,10 @@ def _scan_decode(params, cfg, tok0, caches, pos0, key, length, scfg,
     def step(carry, _):
         tok, caches, pos, key, done = carry
         key, sub = jax.random.split(key)
-        logits, caches = decode_logits(params, tok, caches, pos, cfg)
-        nxt = sample_token(sub, logits, scfg)
+        with annotate("serve/decode_step"):
+            logits, caches = decode_logits(params, tok, caches, pos, cfg)
+        with annotate("serve/sample"):
+            nxt = sample_token(sub, logits, scfg)
         return (nxt, caches, pos + 1, key, done | _hit_stop(nxt, scfg)), nxt
 
     carry, toks = jax.lax.scan(
@@ -116,7 +119,8 @@ def _prefill_sample(params, batch, pos_off, key, cfg, cache_len, scfg):
     engine's admission path reads; the lockstep entry points ignore it
     (it is a pure function of logits they already computed, so carrying it
     changes no numerics)."""
-    logits, caches = api.prefill(params, batch, cfg, cache_len)
+    with annotate("serve/prefill_forward"):
+        logits, caches = api.prefill(params, batch, cfg, cache_len)
     key, sub = jax.random.split(key)
     tok0 = sample_token(sub, logits, scfg)
     pos0 = jnp.asarray(batch["tokens"].shape[1], jnp.int32) + pos_off
@@ -300,9 +304,10 @@ class DecodeEngine:
                 f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"
             )
         batch, pos_off = self._batch_and_off(prompts, extra_inputs)
-        toks = self._gen_fn(scfg)(
-            self.params, batch, pos_off, jax.random.PRNGKey(seed)
-        )
+        with maybe_profile("decode_engine_generate"):
+            toks = self._gen_fn(scfg)(
+                self.params, batch, pos_off, jax.random.PRNGKey(seed)
+            )
         return self._fetch(toks)
 
     def generate_stream(

@@ -109,6 +109,10 @@ class FaultInjector:
     def __init__(self, faults: tuple[Fault, ...] | list[Fault] = ()):
         self.faults = tuple(faults)
         self.injected: collections.Counter = collections.Counter()
+        #: Optional ``(kind, info_dict)`` callback invoked for every fired
+        #: fault — the tracing seam (see ``repro.serve.tracing.fault_hook``)
+        #: that lands injected faults on the request timeline.
+        self.on_fire = None
         self._alloc_calls = 0
         self._alloc_fail_at = {
             f.index for f in self.faults if isinstance(f, AllocFailure)
@@ -132,6 +136,15 @@ class FaultInjector:
         for g in self._poisons.values():
             g.sort()
 
+    def fire(self, kind: str, **info) -> None:
+        """Record that a fault of ``kind`` actually fired: bump the replay
+        counter and notify ``on_fire`` (if set) with the fault's context.
+        Every fired-fault site — here and in the scheduler's forced-preempt
+        path — funnels through this one chokepoint."""
+        self.injected[kind] += 1
+        if self.on_fire is not None:
+            self.on_fire(kind, info)
+
     # -- hook protocol ------------------------------------------------------
 
     def on_alloc(self) -> bool:
@@ -140,7 +153,7 @@ class FaultInjector:
         i = self._alloc_calls
         self._alloc_calls += 1
         if i in self._alloc_fail_at:
-            self.injected["alloc_failure"] += 1
+            self.fire("alloc_failure", index=i)
             return True
         return False
 
@@ -152,7 +165,7 @@ class FaultInjector:
     def arrival_delay(self, uid: int) -> float:
         d = self._delays.get(uid, 0.0)
         if d:
-            self.injected["delay_arrival"] += 1
+            self.fire("delay_arrival", uid=uid, delay=d)
         return d
 
     @property
@@ -176,7 +189,7 @@ class FaultInjector:
         g = pend[0]
         if ngen <= g < ngen + length:
             pend.pop(0)
-            self.injected["poison_logits"] += 1
+            self.fire("poison_logits", uid=uid, gen_index=g)
             return g - ngen
         return None
 

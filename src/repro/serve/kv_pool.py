@@ -162,25 +162,50 @@ class BlockAllocator:
     whose ``True`` forces that call to fail with exhaustion semantics —
     ``None`` returned, no state change.  ``None`` (the default) costs one
     ``is not None`` check per alloc and nothing else.
+
+    ``metrics`` is an optional :class:`repro.serve.metrics.MetricsRegistry`
+    (duck-typed — this module stays dependency-free): when set, the
+    allocator keeps the ``pool_blocks_used`` gauge exact at every
+    alloc/free (utilization is maintained at the source of truth, so it
+    provably returns to zero after a drain) and counts
+    ``block_allocs_total`` (blocks handed out) and
+    ``block_alloc_failures_total`` (exhaustion + injected failures).
     """
 
-    def __init__(self, num_blocks: int, fail_hook=None):
+    def __init__(self, num_blocks: int, fail_hook=None, metrics=None):
         self.num_blocks = num_blocks
         self.fail_hook = fail_hook
         self._free = list(range(num_blocks - 1, -1, -1))  # pop() -> low ids
+        self._g_used = metrics.gauge("pool_blocks_used") if metrics else None
+        self._c_allocs = (
+            metrics.counter("block_allocs_total") if metrics else None
+        )
+        self._c_fail = (
+            metrics.counter("block_alloc_failures_total") if metrics else None
+        )
 
     @property
     def free_count(self) -> int:
         return len(self._free)
 
+    def _mark_fail(self) -> None:
+        if self._c_fail is not None:
+            self._c_fail.inc()
+
     def alloc(self, n: int) -> list[int] | None:
         """n block ids, or None (and no change) if the pool is exhausted
         (or a fault-injection hook says to pretend it is)."""
         if self.fail_hook is not None and self.fail_hook():
+            self._mark_fail()
             return None
         if n > len(self._free):
+            self._mark_fail()
             return None
-        return [self._free.pop() for _ in range(n)]
+        got = [self._free.pop() for _ in range(n)]
+        if self._g_used is not None:
+            self._g_used.set(self.num_blocks - len(self._free))
+            self._c_allocs.inc(n)
+        return got
 
     def free(self, ids) -> None:
         for i in ids:
@@ -189,3 +214,5 @@ class BlockAllocator:
             if i in self._free:
                 raise ValueError(f"double free of block {i}")
         self._free.extend(ids)
+        if self._g_used is not None:
+            self._g_used.set(self.num_blocks - len(self._free))

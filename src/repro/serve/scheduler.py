@@ -76,7 +76,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import logging
-import time
 from typing import Callable, Optional
 
 import jax
@@ -95,6 +94,8 @@ from repro.serve.engine import (
     sample_token,
 )
 from repro.serve.faults import FaultInjector
+from repro.serve.metrics import MetricsRegistry, resolve_clock
+from repro.serve.tracing import RequestTracer, annotate, maybe_profile
 
 Array = jax.Array
 
@@ -346,10 +347,11 @@ def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int,
             caches, st = carry
             split = jax.vmap(jax.random.split)(st["key"])  # (B, 2, 2)
             new_key, sub = split[:, 0], split[:, 1]
-            logits, caches = api.decode_step(
-                params, st["tok"][:, None], caches, st["pos"], cfg,
-                active=st["active"],
-            )
+            with annotate("serve/decode_step"):
+                logits, caches = api.decode_step(
+                    params, st["tok"][:, None], caches, st["pos"], cfg,
+                    active=st["active"],
+                )
             logits = logits[:, -1]  # (B, V)
             if poison:
                 logits = jnp.where(
@@ -359,9 +361,10 @@ def _make_cb_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, length: int,
                 )
             finite = jnp.isfinite(logits).all(axis=-1)  # (B,)
             ok = st["active"] & finite
-            nxt = jax.vmap(
-                lambda s, l: sample_token(s, l[None], scfg)[0]
-            )(sub, logits)
+            with annotate("serve/sample"):
+                nxt = jax.vmap(
+                    lambda s, l: sample_token(s, l[None], scfg)[0]
+                )(sub, logits)
             nxt = jnp.where(ok, nxt, st["tok"])
             act = ok.astype(jnp.int32)
             ngen = st["ngen"] + act
@@ -422,10 +425,11 @@ def _make_prefill_chunk_fn(cfg: ModelConfig, scfg: SamplerConfig, t: int):
 
     def pchunk(params, caches, tokens, pos, active, lengths, slot, key):
         assert tokens.shape[1] == t, "slices must be padded to the budget"
-        logits, caches = api.forward_chunk(
-            params, tokens, caches, pos, cfg, active=active, lengths=lengths,
-            logits_at=jnp.maximum(lengths - 1, 0),
-        )
+        with annotate("serve/prefill_forward"):
+            logits, caches = api.forward_chunk(
+                params, tokens, caches, pos, cfg, active=active,
+                lengths=lengths, logits_at=jnp.maximum(lengths - 1, 0),
+            )
         row = jnp.take(logits, slot, axis=0)
         key, sub = jax.random.split(key)
         tok0 = sample_token(sub, row[None], scfg)[0]
@@ -509,6 +513,15 @@ def _deactivate(state, slot):
 # ---------------------------------------------------------------------------
 
 
+def _tile_cache_stats() -> dict:
+    """Snapshot collector: kernel autotune-cache hit/miss/sweep stats
+    (process-wide — they live with the cache, not the engine).  Deferred
+    import keeps the scheduler importable without the kernel tier."""
+    from repro.kernels import tile_cache
+
+    return {f"tile_cache_{k}": v for k, v in tile_cache.stats().items()}
+
+
 class ContinuousBatchingEngine:
     """Serving tier 3: request queue + slot admission/eviction over one
     compiled fixed-width decode program (see module docstring).
@@ -538,9 +551,24 @@ class ContinuousBatchingEngine:
         prompt length.  Configs where slicing would change streams
         (recurrent mixers, MoE/routed branches, VLM prefixes — see
         :func:`_chunked_prefill_safe`) fall back to one-shot admission.
-    clock : optional callable returning the current time in seconds; by
-        default a virtual clock advances one tick per decode chunk and
-        ``Request.arrival`` is in ticks.
+    clock : optional clock — a bare callable returning seconds, or an
+        object with ``now()`` and optionally ``sleep(dt)`` (see
+        :func:`repro.serve.metrics.resolve_clock`;
+        :class:`~repro.serve.metrics.ManualClock` drives tests without
+        real sleeping).  By default a virtual clock advances one tick per
+        decode chunk and ``Request.arrival`` is in ticks.  Deadline math,
+        trace timestamps and the latency histograms all read this one
+        clock.
+    metrics : optional :class:`repro.serve.metrics.MetricsRegistry` to
+        record into (share one across engines / export to Prometheus);
+        ``None`` creates a private registry — instrumentation is always
+        host-side-only, so this can never change a compiled program.
+    tracer : optional :class:`repro.serve.tracing.RequestTracer`; when set
+        every request's lifecycle (submitted -> admitted -> prefill ->
+        first_token -> decode -> finished(reason)), block alloc/free,
+        preemptions and fired faults are emitted as structured events on
+        the engine clock.  May also be attached later (``eng.tracer =
+        ...``) — benches attach after warm-up.
     max_queue : bound on the admission queue (``None`` = unbounded).  A
         submit into a full queue invokes ``overload_policy`` and the loser
         finishes with reason ``"shed"`` — backpressure is explicit, not an
@@ -572,6 +600,8 @@ class ContinuousBatchingEngine:
         overload_policy: str = "reject",
         watchdog_steps: int = 256,
         faults: Optional[FaultInjector] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[RequestTracer] = None,
     ):
         if cfg.family == "encdec":
             raise NotImplementedError("continuous batching is decoder-only")
@@ -590,28 +620,57 @@ class ContinuousBatchingEngine:
         self.max_blocks = kv_pool.blocks_for(max_len, block_size)
         self.num_blocks = num_blocks or num_slots * self.max_blocks
         self.faults = faults
+        # observability: every engine owns a registry (attach your own to
+        # share one across engines) — ALL instrumentation is host-side
+        # Python at chunk boundaries over data already transferred, so a
+        # registry/tracer can never change a compiled program (pinned by
+        # tests/test_metrics.py's byte-identical-lowering assert).  The
+        # legacy counter attributes (shed_requests, queue_peak, ...) are
+        # compatibility aliases over registry metrics — see the property
+        # block below __init__.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
+        m = self.metrics
+        self._m_submitted = m.counter("requests_submitted_total")
+        self._m_finished = {
+            r: m.counter("requests_finished_total", reason=r)
+            for r in sorted(FINISH_REASONS)
+        }
+        self._m_shed = m.counter("shed_requests_total")
+        self._m_rejected = m.counter("rejected_requests_total")
+        self._m_deadline = m.counter("deadline_misses_total")
+        self._m_quarantined = m.counter("quarantined_total")
+        self._m_preempt = m.counter("preemptions_total")
+        self._m_restarts = m.counter("restarts_total")
+        self._m_admissions = m.counter("admissions_total")
+        self._m_tokens = m.counter("tokens_generated_total")
+        self._m_prefill_tokens = m.counter("prefill_tokens_total")
+        self._m_transfers = m.counter("host_transfers_total")
+        self._m_steps = m.counter("engine_steps_total")
+        self._m_queue_depth = m.gauge("admission_queue_depth")
+        self._m_queue_peak = m.gauge("admission_queue_peak")
+        self._m_occupancy = m.gauge("batch_occupancy")
+        self._m_ttft = m.histogram("ttft_seconds")
+        self._m_itl = m.histogram("itl_seconds")
+        self._m_latency = m.histogram("request_latency_seconds")
+        m.register_collector(_tile_cache_stats)
         self.allocator = (
             kv_pool.BlockAllocator(
                 self.num_blocks,
                 fail_hook=faults.on_alloc if faults is not None else None,
+                metrics=m,
             )
             if layout == "paged" else None
         )
-        self._clock = clock
+        self._clock, self._sleep = resolve_clock(clock)
         self._now = 0.0  # virtual clock (chunk ticks) when clock is None
-        self.host_transfers = 0
-        self.preemptions = 0
-        # backpressure / robustness counters (cumulative over the engine)
+        if faults is not None:
+            # fired faults land on the request timeline (checked at fire
+            # time, so a tracer attached after construction still sees them)
+            faults.on_fire = self._on_fault
         self.max_queue, self.overload_policy = max_queue, overload_policy
         self.watchdog_steps = watchdog_steps
-        self.shed_requests = 0
-        self.rejected_requests = 0
-        self.deadline_misses = 0
-        self.quarantined = 0
-        self.queue_peak = 0
-        self.tokens_generated = 0
-        self.prefill_tokens = 0
-        self.admissions = 0
+        self._admitted_uids: set[int] = set()  # restart detection
         self._stall_steps = 0
         self._step_idx = 0
 
@@ -679,6 +738,81 @@ class ContinuousBatchingEngine:
         self._set_tables = jax.jit(_make_set_tables_fn(cfg), donate_argnums=(0,))
         self._admit_jit = jax.jit(_admit_state, donate_argnums=(0,))
         self._deactivate_jit = jax.jit(_deactivate, donate_argnums=(0,))
+
+    # -- observability ------------------------------------------------------
+    #
+    # Compatibility aliases: the pre-registry counter attributes survive as
+    # properties over registry metrics, with setters because benches reset
+    # them (``eng.host_transfers = 0``) and tests read them directly.
+
+    def _alias(metric):  # noqa: N805 — descriptor factory, not a method
+        def get(self):
+            return int(getattr(self, metric).value)
+
+        def set_(self, v):
+            getattr(self, metric).value = v
+
+        return property(get, set_)
+
+    shed_requests = _alias("_m_shed")
+    rejected_requests = _alias("_m_rejected")
+    deadline_misses = _alias("_m_deadline")
+    quarantined = _alias("_m_quarantined")
+    preemptions = _alias("_m_preempt")
+    admissions = _alias("_m_admissions")
+    tokens_generated = _alias("_m_tokens")
+    prefill_tokens = _alias("_m_prefill_tokens")
+    host_transfers = _alias("_m_transfers")
+    queue_peak = _alias("_m_queue_peak")
+    del _alias
+
+    @property
+    def finished_by_reason(self) -> dict[str, int]:
+        """Cumulative finished-request totals per ``finish_reason`` — the
+        chaos suite's conservation invariant is
+        ``sum(finished_by_reason.values()) == submitted``."""
+        return {r: int(c.value) for r, c in self._m_finished.items()}
+
+    def snapshot(self) -> dict:
+        """The engine's metrics snapshot (see
+        :meth:`repro.serve.metrics.MetricsRegistry.snapshot`)."""
+        return self.metrics.snapshot()
+
+    def _on_fault(self, kind: str, info: dict) -> None:
+        if self.tracer is not None:
+            self.tracer.emit(f"fault_{kind}", t=self.now(), **info)
+
+    def _emit_finished(self, fr: FinishedRequest) -> FinishedRequest:
+        """The single finish chokepoint: every FinishedRequest — zero-token
+        or streamed, any reason — passes through here exactly once, so the
+        per-reason totals conserve requests and the latency histograms see
+        every finish.  ITL uses the same formula the bench used to compute
+        host-side (span / (n - 1)) so engine-sourced rows are comparable."""
+        self._m_finished[fr.finish_reason].inc()
+        n = len(fr.tokens)
+        if n > 0:
+            self._m_ttft.observe(max(0.0, fr.first_token_at - fr.arrival))
+            self._m_itl.observe(
+                max(0.0, fr.finished_at - fr.first_token_at) / max(1, n - 1)
+            )
+        self._m_latency.observe(max(0.0, fr.finished_at - fr.arrival))
+        if self.tracer is not None:
+            self.tracer.emit(
+                "finished", t=fr.finished_at, uid=fr.uid,
+                reason=fr.finish_reason, n_tokens=n,
+            )
+        return fr
+
+    def _trace(self, event: str, uid: Optional[int] = None, **fields) -> None:
+        if self.tracer is not None:
+            self.tracer.emit(event, t=self.now(), uid=uid, **fields)
+
+    def _release_blocks(self, blocks: list[int], uid: int) -> None:
+        """Return a request's blocks to the allocator (the one free path,
+        so every reclamation lands on the trace timeline)."""
+        if blocks:
+            self.allocator.free(blocks)
+            self._trace("block_free", uid=uid, n_blocks=len(blocks))
 
     # -- construction -------------------------------------------------------
 
@@ -784,6 +918,13 @@ class ContinuousBatchingEngine:
             uid, prompt, budget, seed=seed, arrival=arrival,
             deadline=deadline, ttft_budget=ttft_budget,
         )
+        # counted only once validation passed: raised requests never enter
+        # the lifecycle, so submitted == sum(finished_by_reason) conserves
+        self._m_submitted.inc()
+        self._trace(
+            "submitted", uid=uid, arrival=req.arrival,
+            prompt_len=len(prompt),
+        )
         if (deadline is not None and deadline <= arrival) or (
             ttft_budget is not None and ttft_budget <= 0
         ):
@@ -809,6 +950,7 @@ class ContinuousBatchingEngine:
             )
         self._queue.append(req)
         self.queue_peak = max(self.queue_peak, len(self._queue))
+        self._m_queue_depth.set(len(self._queue))
         return uid
 
     def _finish_unstarted(
@@ -818,17 +960,20 @@ class ContinuousBatchingEngine:
         (shed / rejected / deadline while queued / prefill quarantine)."""
         assert reason in FINISH_REASONS, reason
         now = self.now()
-        return FinishedRequest(
+        return self._emit_finished(FinishedRequest(
             req.uid, np.zeros((0,), np.int32), reason, len(req.prompt),
             req.arrival, now, now, now,
-        )
+        ))
 
     def run(self) -> list[FinishedRequest]:
         """Process the queue to completion; FinishedRequests in completion
-        order."""
+        order.  With ``REPRO_PROFILE_DIR`` set the whole run is bracketed
+        by ``jax.profiler.start_trace/stop_trace`` (see
+        :func:`repro.serve.tracing.maybe_profile`)."""
         finished: list[FinishedRequest] = []
-        while self._queue or self._live() or self._pending_finished:
-            finished.extend(self.step())
+        with maybe_profile("serve_run"):
+            while self._queue or self._live() or self._pending_finished:
+                finished.extend(self.step())
         return finished
 
     def step(self) -> list[FinishedRequest]:
@@ -848,6 +993,9 @@ class ContinuousBatchingEngine:
         before = (self.tokens_generated, self.prefill_tokens)
         finished = self._step_body()
         self._step_idx += 1
+        self._m_steps.inc()
+        self._m_queue_depth.set(len(self._queue))
+        self._m_occupancy.set(len(self._live()))
         progressed = bool(finished) or (
             (self.tokens_generated, self.prefill_tokens) != before
         )
@@ -860,7 +1008,9 @@ class ContinuousBatchingEngine:
         else:
             self._stall_steps += 1
             if self._stall_steps >= self.watchdog_steps:
-                raise SchedulerStall(self._stall_report())
+                report = self._stall_report()
+                self._trace("stall", steps=self._stall_steps, report=report)
+                raise SchedulerStall(report)
         return finished
 
     def _step_body(self) -> list[FinishedRequest]:
@@ -880,9 +1030,14 @@ class ContinuousBatchingEngine:
             return finished
         if self.allocator is not None:
             self._ensure_blocks()
-        packed = self._fetch(self._run_chunk())
+        with annotate("serve/decode_chunk"):
+            packed = self._fetch(self._run_chunk())
         if self._clock is None:
             self._now += 1.0
+        self._trace(
+            "decode_chunk", step=self._step_idx,
+            n_decoding=sum(1 for rs in self._live() if rs.n_generated > 0),
+        )
         finished.extend(self._process_chunk(packed))
         return finished
 
@@ -923,7 +1078,9 @@ class ContinuousBatchingEngine:
                 else next((r for r in live if r.request.uid == uid), None)
             )
             if rs is not None:
-                self.faults.injected["force_preempt"] += 1
+                self.faults.fire(
+                    "force_preempt", uid=rs.request.uid, step=self._step_idx
+                )
                 self._preempt(rs)
 
     def _deadline_missed(self, req: Request, now: float,
@@ -963,14 +1120,13 @@ class ContinuousBatchingEngine:
                 self._state = self._deactivate_jit(
                     self._state, jnp.asarray(rs.slot)
                 )
-            if rs.blocks:
-                self.allocator.free(rs.blocks)
+            self._release_blocks(rs.blocks, req.uid)
             self._slots[rs.slot] = None
-            finished.append(FinishedRequest(
+            finished.append(self._emit_finished(FinishedRequest(
                 req.uid, np.asarray(rs.tokens, np.int32), "deadline",
                 len(req.prompt), req.arrival, rs.admitted_at,
                 rs.first_token_at if rs.n_generated > 0 else now, now,
-            ))
+            )))
         return finished
 
     # -- scheduling internals ----------------------------------------------
@@ -985,7 +1141,10 @@ class ContinuousBatchingEngine:
         if self._clock is None:
             self._now = max(self._now, float(nxt))
         else:
-            time.sleep(max(0.0, min(nxt - self.now(), 0.05)))
+            # the clock's own sleep (resolve_clock): a ManualClock test
+            # advances virtual time here instead of really sleeping, so
+            # deadline math, traces and waiting share one timeline
+            self._sleep(max(0.0, min(nxt - self.now(), 0.05)))
 
     def _admit_arrived(self) -> list[FinishedRequest]:
         """FIFO-admit every arrived request that fits a free slot (and, if
@@ -1011,7 +1170,14 @@ class ContinuousBatchingEngine:
                     self._queue.appendleft(req)
                     break
                 blocks = got
+                self._trace("block_alloc", uid=req.uid, n_blocks=len(got))
             self.admissions += 1
+            if req.uid in self._admitted_uids:
+                self._m_restarts.inc()  # re-admission after preemption
+            self._admitted_uids.add(req.uid)
+            self._trace(
+                "admitted", uid=req.uid, slot=free[0], n_blocks=len(blocks)
+            )
             if self.prefill_chunk is not None:
                 self._admit_chunked(req, free[0], blocks)
             else:
@@ -1078,13 +1244,17 @@ class ContinuousBatchingEngine:
         active[rs.slot] = True
         lengths = np.zeros((b,), np.int32)
         lengths[rs.slot] = n
-        tok_d, self._caches, key_d = self._prefill_chunk(
-            self.params, self._caches, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(active), jnp.asarray(lengths),
-            jnp.asarray(rs.slot, jnp.int32), jax.random.PRNGKey(req.seed),
-        )
+        with annotate("serve/chunked_prefill"):
+            tok_d, self._caches, key_d = self._prefill_chunk(
+                self.params, self._caches, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(active), jnp.asarray(lengths),
+                jnp.asarray(rs.slot, jnp.int32), jax.random.PRNGKey(req.seed),
+            )
         rs.prefilled += n
         self.prefill_tokens += n
+        self._trace(
+            "prefill_chunk", uid=req.uid, prefilled=rs.prefilled, total=s
+        )
         if rs.prefilled < s:
             return []
         # one packed [tok0, finite] fetch per admission — validity rides
@@ -1094,14 +1264,14 @@ class ContinuousBatchingEngine:
         now = self.now()
         if not ok:
             self.quarantined += 1
-            if rs.blocks:
-                self.allocator.free(rs.blocks)
+            self._release_blocks(rs.blocks, req.uid)
             self._slots[rs.slot] = None
-            return [FinishedRequest(
+            return [self._emit_finished(FinishedRequest(
                 req.uid, np.zeros((0,), np.int32), "error", s,
                 req.arrival, rs.admitted_at, now, now,
-            )]
+            ))]
         self.tokens_generated += 1
+        self._trace("first_token", uid=req.uid)
         done = self._finish_at_admission(req, tok0, rs.blocks,
                                          rs.admitted_at)
         if done is not None:
@@ -1128,13 +1298,12 @@ class ContinuousBatchingEngine:
         if tok0 not in self._stop_set and req.max_new_tokens != 1:
             return None
         reason = "stop" if tok0 in self._stop_set else "length"
-        if blocks:
-            self.allocator.free(blocks)
+        self._release_blocks(blocks, req.uid)
         now = self.now()
-        return FinishedRequest(
+        return self._emit_finished(FinishedRequest(
             req.uid, np.asarray([tok0], np.int32), reason, len(req.prompt),
             req.arrival, admitted_at, now, now,
-        )
+        ))
 
     def _bucket_len(self, s: int) -> int:
         """Smallest power of two >= s, capped at the slot capacity."""
@@ -1166,20 +1335,21 @@ class ContinuousBatchingEngine:
     def _admit(
         self, req: Request, slot: int, blocks: list[int]
     ) -> Optional[FinishedRequest]:
-        tok0_d, small, pos0, key = self._admission_prefill(req)
+        with annotate("serve/admission_prefill"):
+            tok0_d, small, pos0, key = self._admission_prefill(req)
         # one packed [tok0, finite] fetch per admission
         arr = self._fetch(tok0_d)
         tok0, ok = int(arr[0]), bool(arr[1])
         now = self.now()
         if not ok:
             self.quarantined += 1
-            if blocks:
-                self.allocator.free(blocks)
-            return FinishedRequest(
+            self._release_blocks(blocks, req.uid)
+            return self._emit_finished(FinishedRequest(
                 req.uid, np.zeros((0,), np.int32), "error",
                 len(req.prompt), req.arrival, now, now, now,
-            )
+            ))
         self.tokens_generated += 1
+        self._trace("first_token", uid=req.uid)
         done = self._finish_at_admission(req, tok0, blocks, now)
         if done is not None:
             return done
@@ -1235,6 +1405,9 @@ class ContinuousBatchingEngine:
                         break  # the requester itself was youngest: requeued
                     continue
                 rs.blocks.extend(got)
+                self._trace(
+                    "block_alloc", uid=rs.request.uid, n_blocks=len(got)
+                )
                 self._caches = self._set_tables(
                     self._caches, jnp.asarray(rs.slot),
                     self._table_row(rs.blocks),
@@ -1254,11 +1427,13 @@ class ContinuousBatchingEngine:
         it restarts from scratch on re-admission (same seed -> same token
         stream, so preemption is invisible in the output)."""
         self.preemptions += 1
+        self._trace(
+            "preempted", uid=rs.request.uid, n_generated=rs.n_generated
+        )
         self._state = self._deactivate_jit(
             self._state, jnp.asarray(rs.slot)
         )
-        if rs.blocks:
-            self.allocator.free(rs.blocks)
+        self._release_blocks(rs.blocks, rs.request.uid)
         self._slots[rs.slot] = None
         self._queue.appendleft(rs.request)
 
@@ -1337,15 +1512,14 @@ class ContinuousBatchingEngine:
                 )
             if not rs.done:
                 continue
-            if rs.blocks:
-                self.allocator.free(rs.blocks)
+            self._release_blocks(rs.blocks, rs.request.uid)
             self._slots[rs.slot] = None
             req = rs.request
             finished.append(
-                FinishedRequest(
+                self._emit_finished(FinishedRequest(
                     req.uid, np.asarray(rs.tokens, np.int32),
                     rs.finish_reason, len(req.prompt), req.arrival,
                     rs.admitted_at, rs.first_token_at, now,
-                )
+                ))
             )
         return finished

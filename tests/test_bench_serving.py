@@ -8,10 +8,31 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
-def test_bench_serving_smoke(capsys):
-    from benchmarks import bench_serving
+def test_bench_serving_smoke(capsys, tmp_path):
+    import json
 
-    rows = bench_serving.run(smoke=True, n_requests=4)
+    from benchmarks import bench_serving
+    from repro.serve.metrics import validate_snapshot
+
+    metrics_out = tmp_path / "metrics.json"
+    trace_out = tmp_path / "trace.jsonl"
+    rows = bench_serving.run(smoke=True, n_requests=4,
+                             metrics_out=str(metrics_out),
+                             trace_out=str(trace_out))
+    # the telemetry artifacts CI archives next to BENCH_serving.json:
+    # a schema-valid engine metrics snapshot sourcing the row numbers...
+    snap = json.loads(metrics_out.read_text())
+    validate_snapshot(snap)
+    assert snap["counters"]["requests_submitted_total"] == 4
+    fin = [v for k, v in snap["counters"].items()
+           if k.startswith("requests_finished_total{")]
+    assert sum(fin) == 4  # conservation, straight from the artifact
+    assert snap["histograms"]["ttft_seconds"]["count"] > 0
+    # ...and the request lifecycle trace (post-warm: the timed run only)
+    evs = [json.loads(line) for line in trace_out.read_text().splitlines()]
+    kinds = {e["event"] for e in evs}
+    assert {"submitted", "admitted", "first_token", "finished"} <= kinds
+    assert sum(e["event"] == "submitted" for e in evs) == 4
     names = [r.split(",")[0] for r in rows]
     assert "serving/lockstep" in names
     assert "serving/continuous" in names

@@ -133,6 +133,17 @@ def _check_chaos_run(params, oracle, layout, prefill_chunk, seed):
     if eng.allocator is not None:
         assert eng.allocator.free_count == eng.num_blocks
     assert eng._live() == [] and not eng._queue
+
+    # telemetry conservation: every submission is accounted for by
+    # exactly one finish-reason counter, whatever faults fired
+    snap = eng.snapshot()
+    fbr = eng.finished_by_reason
+    assert set(fbr) == set(FINISH_REASONS)
+    assert sum(fbr.values()) == len(REQS) == len(finished)
+    assert snap["counters"]["requests_submitted_total"] == len(REQS)
+    # and the pool-utilization gauge agrees with the drained free list
+    if eng.allocator is not None:
+        assert snap["gauges"]["pool_blocks_used"] == 0
     return eng, inj
 
 
