@@ -56,7 +56,23 @@ def main():
                     help="export weights to the packed integer serving "
                          "layout first: decode runs the W1A8 GEMV kernel "
                          "tier on stored integers (paper Appendix A)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve on a (data, model) device mesh, e.g. 1x2: "
+                         "packed weights shard N-major over the model "
+                         "axis, paged KV pools shard over KV heads; the "
+                         "scheduler and slot state stay replicated.  "
+                         "Defaults to REPRO_MESH when set")
     args = ap.parse_args()
+
+    from repro.launch.mesh import make_host_mesh, mesh_from_env
+
+    if args.mesh:
+        data, model = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = make_host_mesh(data=data, model=model)
+    else:
+        mesh = mesh_from_env()
+    if mesh is not None:
+        print(f"serving on mesh {dict(mesh.shape)}")
 
     cfg = get_config(args.arch)
     if args.reduced or not args.ckpt:
@@ -92,7 +108,7 @@ def main():
         eng = ContinuousBatchingEngine(
             params, cfg, num_slots=max(2, args.batch // 2), max_len=max_len,
             scfg=scfg, layout="paged", block_size=args.block_size,
-            prefill_chunk=args.prefill_chunk,
+            prefill_chunk=args.prefill_chunk, mesh=mesh,
         )
         if args.prefill_chunk and eng.prefill_chunk is None:
             print("note: config is not chunk-safe; one-shot admission")
@@ -115,7 +131,9 @@ def main():
                   f"{f.tokens.tolist()}")
         return
 
-    server = BatchedServer(params, cfg, max_len=args.prompt_len + args.new_tokens + 1)
+    server = BatchedServer(params, cfg,
+                           max_len=args.prompt_len + args.new_tokens + 1,
+                           mesh=mesh)
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 3, cfg.vocab_size
     ).astype(jnp.int32)

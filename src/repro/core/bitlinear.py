@@ -79,9 +79,17 @@ def bitlinear(
     if is_packed_1bit(w):
         # packed serving layout: run the true-integer W1A8 kernel tier
         # (act-quant fused; decode shapes hit the GEMV kernels) instead of
-        # dequantize-then-float-matmul.
+        # dequantize-then-float-matmul.  Under an active mesh whose rules
+        # shard this weight's output dim, the call runs as a shard_map
+        # island over the N-major shards (tensor-parallel serving).
         from repro.kernels import ops  # deferred: kernels are serving-only
+        from repro.distributed.sharding import nmajor_axis
 
+        axis = nmajor_axis(w["packed"].shape[-1],
+                           waxes[-1] if waxes else None)
+        if axis is not None:
+            return ops.bit_linear_infer_nshard(
+                x, w["packed"], w["scale"], axis, out_dtype=x.dtype)
         return ops.bit_linear_infer(x, w["packed"], w["scale"],
                                     out_dtype=x.dtype)
     if cfg.mode == "none" and not isinstance(w, dict):

@@ -189,17 +189,30 @@ def _ffn_packed_apply(params, xf: Array, glu: bool, act_fn) -> Array:
     quantization grid and differ only by integer-vs-float accumulation.
     """
     from repro.kernels import ops  # deferred: kernels are serving-only
+    from repro.distributed.sharding import nmajor_axis
 
     has_1bit = "w1_up" in params
     dt = xf.dtype
     one = jnp.ones((), jnp.float32)
 
+    # last (output) logical axis per serving weight — drives the N-major
+    # shard_map island dispatch under an active mesh (no-op without one)
+    _NAXIS = {"w1_gate": "ffn", "w1_up": "ffn", "w1_down": "embed",
+              "w8_gate": "ffn8", "w8_up": "ffn8", "w8_down": "embed"}
+
     def bit_lin(name, h):
         w = params[name]
+        ax = nmajor_axis(w["packed"].shape[-1], _NAXIS[name])
+        if ax is not None:
+            return ops.bit_linear_infer_nshard(
+                h, w["packed"], w["scale"], ax, out_dtype=dt)
         return ops.bit_linear_infer(h, w["packed"], w["scale"], out_dtype=dt)
 
     def int8_lin(name, h):
         q, s = _int8_kernel_view(params[name])
+        ax = nmajor_axis(q.shape[-1], _NAXIS[name])
+        if ax is not None:
+            return ops.int8_linear_infer_nshard(h, q, s, ax, out_dtype=dt)
         return ops.int8_linear_infer(h, q, s, out_dtype=dt)
 
     h1 = None
@@ -207,6 +220,12 @@ def _ffn_packed_apply(params, xf: Array, glu: bool, act_fn) -> Array:
         def pair(name1, name8):
             w1 = params[name1]
             q8, s8 = _int8_kernel_view(params[name8])
+            ax = nmajor_axis(w1["packed"].shape[-1], _NAXIS[name1])
+            if ax is not None:
+                return ops.decoupled_first_gemm_nshard(
+                    xf, w1["packed"], q8, w1["scale"], s8, one, one, ax,
+                    out_dtype=dt,
+                )
             return ops.decoupled_first_gemm(
                 xf, w1["packed"], q8, w1["scale"], s8, one, one, out_dtype=dt
             )
@@ -255,9 +274,15 @@ def _branch1_apply(params, x: Array, glu: bool, act_fn, qcfg: QuantConfig) -> Ar
                   else ("w1_up", "w1_down"))
     ):
         from repro.kernels import ops
+        from repro.distributed.sharding import nmajor_axis
 
         def lin(name, h):
             w = params[name]
+            ax = nmajor_axis(w["packed"].shape[-1],
+                             "embed" if name == "w1_down" else "ffn")
+            if ax is not None:
+                return ops.bit_linear_infer_nshard(
+                    h, w["packed"], w["scale"], ax, out_dtype=x.dtype)
             return ops.bit_linear_infer(
                 h, w["packed"], w["scale"], out_dtype=x.dtype
             )

@@ -155,6 +155,22 @@ def _lookup_path(tree, path):
     return node
 
 
+def relaxed_spec(shape, axes: Sequence[Optional[str]], mesh: Mesh) -> P:
+    """logical axes -> PartitionSpec under the current rules, dropping any
+    axis whose dim isn't divisible by its mesh extent (per-dim, unlike
+    ``_dim_divisible``'s all-or-nothing check)."""
+    relaxed = []
+    for size, a in zip(shape, axes):
+        s = _mesh_axes_for(a, mesh)
+        if s is None:
+            relaxed.append(None)
+            continue
+        saxes = (s,) if isinstance(s, str) else s
+        n = int(np.prod([mesh.shape[m] for m in saxes]))
+        relaxed.append(s if size % n == 0 else None)
+    return P(*relaxed)
+
+
 def param_sharding_for(params_tree, axes_tree, mesh: Mesh) -> Any:
     """Map params (arrays or ShapeDtypeStructs) + their logical-axes tree to
     NamedShardings, relaxing any axis whose dim isn't divisible by the mesh
@@ -166,14 +182,61 @@ def param_sharding_for(params_tree, axes_tree, mesh: Mesh) -> Any:
     for path, p in paths_and_leaves:
         axes = _lookup_path(axes_tree, path)
         assert len(axes) == len(p.shape), f"{axes} vs {p.shape} at {path}"
-        relaxed = []
-        for size, a in zip(p.shape, axes):
-            s = _mesh_axes_for(a, mesh)
-            if s is None:
-                relaxed.append(None)
-                continue
-            saxes = (s,) if isinstance(s, str) else s
-            n = int(np.prod([mesh.shape[m] for m in saxes]))
-            relaxed.append(s if size % n == 0 else None)
-        out.append(NamedSharding(mesh, P(*relaxed)))
+        out.append(NamedSharding(mesh, relaxed_spec(p.shape, axes, mesh)))
+    return jtu.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Serving (tensor-parallel inference) rules
+# ---------------------------------------------------------------------------
+
+# Rule overrides for the serving engines (see serve/__init__.py §sharded
+# serving).  Serving is column-parallel only: weights shard on their LAST
+# (output/N-major) dim, so no dot-product reduction is ever split — a
+# 1-device mesh stays bit-for-bit the unsharded engine and a multi-device
+# mesh differs only where XLA re-associates the per-layer collective.
+#   embed -> None : no FSDP at inference; row-side weights (wo, w1_down,
+#                   embedding table) replicate, so the one collective per
+#                   sublayer is the all-gather of the N-sharded activation
+#                   at the replicated down-projection boundary.
+#   batch -> None : per-slot state (tok/pos/PRNG/masks, block tables)
+#                   replicates; the host-side scheduler stays global.
+#   experts -> None : stacked 8-bit branches are r-narrow; replicate.
+SERVING_OVERRIDES: dict[str, Any] = {
+    "embed": None,
+    "batch": None,
+    "experts": None,
+}
+
+
+def nmajor_axis(n: int, logical: Optional[str]) -> Optional[str]:
+    """Mesh axis an N-major (last) weight dim of size ``n`` shards over
+    under the active rules, or None (no mesh / unmapped / multi-axis /
+    indivisible / size-1 axis).  The kernel dispatchers use this to decide
+    whether to open a ``shard_map`` island around a packed-weight call."""
+    mesh = _STATE.mesh
+    if mesh is None or logical is None:
+        return None
+    s = _mesh_axes_for(logical, mesh)
+    if s is None or not isinstance(s, str):
+        return None
+    ws = mesh.shape[s]
+    return s if ws > 1 and n % ws == 0 else None
+
+
+def nmajor_param_sharding(params_tree, axes_tree, mesh: Mesh) -> Any:
+    """Column-parallel parameter placement: shard ONLY each leaf's last dim
+    (when its logical axis maps to a present mesh axis and divides); every
+    other dim replicates.  This is the serving-engine placement — it keeps
+    every dot-product reduction whole (exact numerics per shard) while the
+    packed-weight bytes split N-major across the model axis."""
+    import jax.tree_util as jtu
+
+    paths_and_leaves, treedef = jtu.tree_flatten_with_path(params_tree)
+    out = []
+    for path, p in paths_and_leaves:
+        axes = _lookup_path(axes_tree, path)
+        assert len(axes) == len(p.shape), f"{axes} vs {p.shape} at {path}"
+        masked = (None,) * (len(axes) - 1) + (axes[-1],) if axes else ()
+        out.append(NamedSharding(mesh, relaxed_spec(p.shape, masked, mesh)))
     return jtu.tree_unflatten(treedef, out)

@@ -37,9 +37,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.quantization import quantize_act_int8  # noqa: F401  (re-export:
 # the single act-quant source of truth lives in core.quantization)
+from repro.distributed import sharding as _sharding
 from repro.kernels import ref, tile_cache
 from repro.kernels.decoupled_matmul import decoupled_matmul
 from repro.kernels.int8_matmul import int8_matmul
@@ -287,6 +290,88 @@ def bit_linear_infer(
     else:
         y = _bit_linear_prefill(xf, w_packed, lam, out_dtype)
     return y.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel (N-major) kernel islands
+# ---------------------------------------------------------------------------
+#
+# GSPMD treats a pallas_call as opaque, so an N-sharded packed weight fed to
+# the plain dispatchers would be all-gathered around the kernel.  The
+# ``*_nshard`` wrappers instead open a ``shard_map`` island over the active
+# mesh: x / scales come in replicated, the weight comes in N-major-sharded,
+# and each device runs the SAME kernel on its local (K, N/ws) shard — no
+# collective inside the island, the dot-product reduction is never split,
+# so per-shard outputs are bitwise slices of the unsharded result.  Because
+# the kernel body sees the LOCAL shapes, the tile-dispatch keys
+# (``_tile_key(op, m, k, n_local)``) become per-shard automatically — a
+# swept winner on one shard width never collides with the full-width entry.
+
+
+def _rep(ndim: int) -> P:
+    return P(*([None] * ndim))
+
+
+def _nshard(ndim: int, axis: str) -> P:
+    return P(*([None] * (ndim - 1) + [axis]))
+
+
+def bit_linear_infer_nshard(
+    x: Array, w_packed: Array, lam: Array, axis: str, out_dtype=jnp.bfloat16
+) -> Array:
+    """:func:`bit_linear_infer` with ``w_packed`` sharded N-major over mesh
+    axis ``axis`` (callers decide via ``sharding.nmajor_axis``).  ``lam`` is
+    the per-weight AbsMean scalar — replicated, so every shard dequantizes
+    with the same scale (per-shard scales == the full scale)."""
+    mesh = _sharding.active_mesh()
+    fn = functools.partial(bit_linear_infer, out_dtype=out_dtype)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(_rep(x.ndim), _nshard(2, axis), _rep(lam.ndim)),
+        out_specs=_nshard(x.ndim, axis), check_rep=False,
+    )(x, w_packed, lam)
+
+
+def int8_linear_infer_nshard(
+    x: Array, w_q: Array, wscale: Array, axis: str, out_dtype=jnp.bfloat16
+) -> Array:
+    """:func:`int8_linear_infer` with ``w_q`` sharded N-major; the AbsMax
+    weight scale is a replicated scalar, shared by every shard."""
+    mesh = _sharding.active_mesh()
+    fn = functools.partial(int8_linear_infer, out_dtype=out_dtype)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(_rep(x.ndim), _nshard(2, axis), _rep(wscale.ndim)),
+        out_specs=_nshard(x.ndim, axis), check_rep=False,
+    )(x, w_q, wscale)
+
+
+def decoupled_first_gemm_nshard(
+    x: Array,
+    w1_packed: Array,
+    w8_q: Array,
+    lam: Array,
+    w8scale: Array,
+    alpha: Array,
+    beta: Array,
+    axis: str,
+    out_dtype=jnp.bfloat16,
+):
+    """:func:`decoupled_first_gemm` with the 1-bit trunk sharded N-major.
+    The r-narrow 8-bit branch stays replicated (``ffn8`` maps to no mesh
+    axis under the serving rules), so y1 comes out sharded and y8 comes out
+    replicated."""
+    mesh = _sharding.active_mesh()
+    fn = functools.partial(decoupled_first_gemm, out_dtype=out_dtype)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(
+            _rep(x.ndim), _nshard(2, axis), _rep(2), _rep(lam.ndim),
+            _rep(w8scale.ndim), _rep(alpha.ndim), _rep(beta.ndim),
+        ),
+        out_specs=(_nshard(x.ndim, axis), _rep(x.ndim)),
+        check_rep=False,
+    )(x, w1_packed, w8_q, lam, w8scale, alpha, beta)
 
 
 def int8_linear_infer(

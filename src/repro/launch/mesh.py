@@ -21,8 +21,46 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over locally available devices (tests / CPU examples)."""
+    """Small mesh over locally available devices (tests / CPU examples).
+
+    Validates the requested shape against the visible device count before
+    handing off to jax, so a bad request fails with an actionable message
+    instead of an opaque mesh-construction error.
+    """
+    if data < 1 or model < 1:
+        raise ValueError(
+            f"mesh axes must be positive, got data={data} model={model}")
+    need = data * model
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"requested a {data}x{model} (data, model) mesh = {need} devices "
+            f"but only {have} are visible; on CPU, force extra devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_from_env(var: str = "REPRO_MESH"):
+    """Build a host mesh from ``REPRO_MESH=data,model`` (e.g. ``1,2``).
+
+    Returns None when the variable is unset or empty, so call sites can do
+    ``mesh = mesh_from_env()`` and fall through to unsharded serving.
+    """
+    import os
+
+    spec = os.environ.get(var, "").strip()
+    if not spec:
+        return None
+    parts = spec.replace("x", ",").split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"{var} must be 'data,model' (e.g. '1,2'), got {spec!r}")
+    try:
+        data, model = (int(p) for p in parts)
+    except ValueError:
+        raise ValueError(
+            f"{var} must hold two integers 'data,model', got {spec!r}")
+    return make_host_mesh(data, model)
 
 
 def mesh_chip_count(mesh) -> int:

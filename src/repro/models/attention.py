@@ -432,6 +432,10 @@ def attention_chunk(
         vp = kv_pool.write_span(
             cache["vpool"], cache["table"], posv, v, active, lengths
         )
+        # pool layout (NB, BS, Hkv, D): shards over KV heads on `model`;
+        # the per-slot table replicates with the rest of the slot state
+        kp = shard_hint(kp, None, None, "cache_heads", None)
+        vp = shard_hint(vp, None, None, "cache_heads", None)
         out = _paged_scores(
             q, kp, vp, cache["table"], posv, posmat,
             lengths if lengths is not None else t, read_to,
@@ -495,6 +499,8 @@ def attention_decode(
         posv = jnp.broadcast_to(pos, (b,))
         kp = kv_pool.write(cache["kpool"], cache["table"], posv, k[:, 0], active)
         vp = kv_pool.write(cache["vpool"], cache["table"], posv, v[:, 0], active)
+        kp = shard_hint(kp, None, None, "cache_heads", None)
+        vp = shard_hint(vp, None, None, "cache_heads", None)
         out = _paged_scores(
             q, kp, vp, cache["table"], posv, posv[:, None], 1, None
         )

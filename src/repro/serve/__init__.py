@@ -66,6 +66,37 @@ steps hit the fused-act-quant GEMV kernels (``repro.kernels``).  The packed
 engines are bit-for-bit self-consistent across tiers and stay within float
 rounding of the fake-quant oracle (``tests/test_packed_serving.py``).
 
+Sharded serving — every tier accepts ``mesh=`` (a ``(data, model)`` device
+mesh from ``repro.launch.mesh.make_host_mesh`` / ``mesh_from_env``, or the
+``--mesh DxM`` flag on ``examples/serve_lm.py``) and runs the same
+compiled programs tensor-parallel:
+
+* **What shards** — weights column-parallel only (N-major, the *output*
+  dim: packed sign-bit planes, INT8-branch matrices and their latent
+  float counterparts for Q/K/V and the FFN up/gate projections) over the
+  ``model`` axis, with the per-tensor AbsMean / AbsMax scales replicated
+  — a shard dequantizes with the same scalar as the whole weight, so
+  every per-shard output is a bitwise slice of the unsharded result (no
+  K reduction is ever split).  Paged K/V pools shard over KV heads
+  (``cache_heads``); packed-weight kernels run inside per-shard
+  ``shard_map`` islands (``kernels.ops.*_nshard``) so each shard
+  autotunes its own GEMV tile for its local N.
+* **What replicates** — the host-side scheduler, admission queue,
+  fault/metrics/tracing layers, per-slot positions / masks / PRNG keys,
+  block tables, and dense ring caches (serving overrides map ``batch``
+  to no mesh axis; indivisible head counts relax to replicated).
+* **Where the collective sits** — one all-gather per sublayer, at the
+  boundary where the N-sharded activation meets the replicated
+  down/output projection; XLA inserts it from the shardings, so the
+  1-device mesh lowers to exactly the meshless program.
+
+``tests/test_sharded_serving.py`` pins the contract: mesh ``(1,1)`` is
+bit-for-bit the meshless engine (both layouts, one-shot and chunked
+prefill, greedy and sampled), and a forced 2-device CPU mesh reproduces
+the token streams with weights and pools genuinely sharded.  The mesh
+shape is exported as ``mesh_data_parallelism`` / ``mesh_model_parallelism``
+gauges in the metrics snapshot.
+
 Request lifecycle (tier 3) — every submitted request traverses the state
 machine exactly once and finishes exactly once::
 

@@ -26,18 +26,85 @@ sampling never branches on step index.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
 from repro.models import api
 from repro.serve.tracing import annotate, maybe_profile
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel serving helpers (shared with serve.scheduler)
+# ---------------------------------------------------------------------------
+
+
+def serving_overrides(cfg: ModelConfig, mesh, extra: Optional[dict] = None):
+    """Sharding-rule overrides for serving ``cfg`` on ``mesh``: the
+    column-parallel base (:data:`repro.distributed.sharding.
+    SERVING_OVERRIDES`) plus cfg-driven relaxations — when a head count
+    doesn't divide the model axis, the whole head family drops to
+    replicated so a flattened ``(heads * head_dim)`` weight dim can never
+    shard *within* a head (MQA/GQA on a wide mesh)."""
+    ov = dict(shd.SERVING_OVERRIDES)
+    ws = int(dict(mesh.shape).get("model", 1))
+    if ws > 1:
+        if getattr(cfg, "n_kv_heads", 0) % ws:
+            ov.update({"kv_heads": None, "cache_heads": None})
+        if getattr(cfg, "n_heads", 0) % ws:
+            ov.update({"heads": None, "act_heads": None})
+    if extra:
+        ov.update(extra)
+    return ov
+
+
+def _matching_axes(params, cfg: ModelConfig):
+    """The logical-axes tree matching ``params``' structure — latent
+    (``api.params_shape_and_axes``) or either packed serving export — or
+    None when no candidate matches (caller replicates)."""
+    import jax.tree_util as jtu
+
+    want = jtu.tree_structure(params)
+    candidates = []
+    try:
+        candidates.append(api.params_shape_and_axes(cfg))
+    except Exception:  # noqa: BLE001 — family without a shape oracle
+        pass
+    try:
+        from repro.train.quantized_serving import serving_params_shape_and_axes
+
+        for packed in (True, False):
+            candidates.append(serving_params_shape_and_axes(cfg, packed))
+    except Exception:  # noqa: BLE001
+        pass
+    for shapes, axes in candidates:
+        if jtu.tree_structure(shapes) == want:
+            return axes
+    return None
+
+
+def place_params(params, cfg: ModelConfig, mesh, overrides,
+                 param_axes=None):
+    """``device_put`` a parameter tree onto ``mesh`` with the N-major
+    (column-parallel) serving placement; unmatched trees replicate."""
+    axes = param_axes if param_axes is not None else _matching_axes(params, cfg)
+    with shd.sharding_rules(mesh, overrides):
+        if axes is None:
+            shardings = jax.tree.map(
+                lambda _: NamedSharding(mesh, PartitionSpec()), params
+            )
+        else:
+            shardings = shd.nmajor_param_sharding(params, axes, mesh)
+    return jax.device_put(params, shardings)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,16 +290,41 @@ class DecodeEngine:
     Compiled programs are cached per (max_new_tokens, temperature, top_k)
     sampler signature (jax.jit adds the batch-shape axis underneath), so a
     server reuses one compilation across calls.
+
+    ``mesh`` (a ``(data, model)`` mesh from ``launch.mesh``) turns on
+    tensor-parallel serving: parameters are placed N-major over the model
+    axis and every compiled program is traced inside the serving sharding
+    rules, so the annotations in the model stack become GSPMD constraints
+    and the packed-kernel dispatch opens its shard_map islands.  A 1-device
+    mesh streams bit-for-bit the meshless engine.
     """
 
-    def __init__(self, params, cfg: ModelConfig, max_len: int):
-        self.params, self.cfg, self.max_len = params, cfg, max_len
+    def __init__(self, params, cfg: ModelConfig, max_len: int, *,
+                 mesh=None, param_axes=None, mesh_overrides=None):
+        self.cfg, self.max_len = cfg, max_len
+        self.mesh = mesh
+        self._overrides = (
+            serving_overrides(cfg, mesh, mesh_overrides)
+            if mesh is not None else None
+        )
+        if mesh is not None:
+            params = place_params(params, cfg, mesh, self._overrides,
+                                  param_axes)
+        self.params = params
         self._gen_fns: dict = {}
         self._prefill_fns: dict = {}
         self._chunk_fns: dict = {}
         # device->host transfers performed (the engine test asserts exactly
         # one per generate() call)
         self.host_transfers = 0
+
+    def _mesh_ctx(self):
+        """Rule context active while a compiled fn is called (tracing runs
+        at call time, in the calling thread, so this is where the serving
+        rules must be installed)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shd.sharding_rules(self.mesh, self._overrides)
 
     # -- compilation caches -------------------------------------------------
 
@@ -304,7 +396,7 @@ class DecodeEngine:
                 f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"
             )
         batch, pos_off = self._batch_and_off(prompts, extra_inputs)
-        with maybe_profile("decode_engine_generate"):
+        with maybe_profile("decode_engine_generate"), self._mesh_ctx():
             toks = self._gen_fn(scfg)(
                 self.params, batch, pos_off, jax.random.PRNGKey(seed)
             )
@@ -337,17 +429,19 @@ class DecodeEngine:
                 f"max_new_tokens must be >= 1, got {scfg.max_new_tokens}"
             )
         batch, pos_off = self._batch_and_off(prompts, extra_inputs)
-        tok, caches, pos, key = self._prefill_fn(scfg)(
-            self.params, batch, pos_off, jax.random.PRNGKey(seed)
-        )
+        with self._mesh_ctx():
+            tok, caches, pos, key = self._prefill_fn(scfg)(
+                self.params, batch, pos_off, jax.random.PRNGKey(seed)
+            )
         done = _hit_stop(tok, scfg)  # stays on device (no transfer)
         pending = tok[:, None]  # first token rides with the first chunk
         remaining = scfg.max_new_tokens - 1
         while remaining > 0:
             step = min(chunk, remaining)
-            packed, (tok, caches, pos, key, done) = self._chunk_fn(
-                scfg, step
-            )(self.params, tok, caches, pos, key, done)
+            with self._mesh_ctx():
+                packed, (tok, caches, pos, key, done) = self._chunk_fn(
+                    scfg, step
+                )(self.params, tok, caches, pos, key, done)
             if pending is not None:  # device-side concat: one fetch per chunk
                 packed = jnp.concatenate([pending, packed], axis=1)
                 pending = None

@@ -77,6 +77,51 @@ def init_paged_attention_cache(
     return cache, axes
 
 
+# Trailing-dim-aligned logical axes per cache-dict key, for placing a whole
+# engine cache tree on a mesh (stacked ring layers carry a leading layer
+# dim — pad with None).  Pools shard over KV heads on `model`; per-slot
+# tables and dense ring caches follow the `batch` rule, which the serving
+# overrides map to None (replicated with the rest of the slot state).
+CACHE_KEY_AXES: dict[str, tuple] = {
+    "kpool": (None, None, "cache_heads", None),
+    "vpool": (None, None, "cache_heads", None),
+    "table": ("batch", None),
+    "k": ("batch", "cache_seq", "cache_heads", None),
+    "v": ("batch", "cache_seq", "cache_heads", None),
+    "ckv": ("batch", "cache_seq", None),   # MLA latent caches stay dense
+    "kpe": ("batch", "cache_seq", None),
+}
+
+
+def cache_sharding(cache_tree, mesh):
+    """NamedShardings for an engine cache tree (per-layer dicts, possibly
+    stacked), keyed on the cache-dict key via :data:`CACHE_KEY_AXES`.
+    Unknown keys and indivisible dims replicate.  Must run inside
+    ``sharding.sharding_rules`` so the serving rule overrides apply."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+    from repro.distributed import sharding as sh
+
+    leaves, treedef = tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in leaves:
+        key = None
+        for entry in reversed(path):
+            k = getattr(entry, "key", None)
+            if isinstance(k, str):
+                key = k
+                break
+        axes = CACHE_KEY_AXES.get(key)
+        if axes is None or len(axes) > leaf.ndim:
+            spec = PartitionSpec()
+        else:
+            padded = (None,) * (leaf.ndim - len(axes)) + tuple(axes)
+            spec = sh.relaxed_spec(leaf.shape, padded, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return tree_unflatten(treedef, out)
+
+
 def write(
     pool: Array,  # (NB, BS, H, D)
     table: Array,  # (B, MB) int32

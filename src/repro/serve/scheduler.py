@@ -83,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
 from repro.models import api
 from repro.models.transformer import build_segments
 from repro.serve import kv_pool
@@ -91,7 +92,9 @@ from repro.serve.engine import (
     _hit_stop,
     _make_bucketed_prefill_fn,
     _make_checked_prefill_fn,
+    place_params,
     sample_token,
+    serving_overrides,
 )
 from repro.serve.faults import FaultInjector
 from repro.serve.metrics import MetricsRegistry, resolve_clock
@@ -602,6 +605,9 @@ class ContinuousBatchingEngine:
         faults: Optional[FaultInjector] = None,
         metrics: Optional[MetricsRegistry] = None,
         tracer: Optional[RequestTracer] = None,
+        mesh=None,
+        param_axes=None,
+        mesh_overrides: Optional[dict] = None,
     ):
         if cfg.family == "encdec":
             raise NotImplementedError("continuous batching is decoder-only")
@@ -613,6 +619,19 @@ class ContinuousBatchingEngine:
             raise ValueError(f"unknown overload policy {overload_policy!r}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        # tensor-parallel serving: params go down N-major over the model
+        # axis and every compiled program below is traced inside the
+        # serving sharding rules (see serve/__init__.py §sharded serving).
+        # The host-side scheduler/queue/fault/metrics layers are untouched
+        # — they only ever see fetched numpy and per-slot python state.
+        self.mesh = mesh
+        self._overrides = (
+            serving_overrides(cfg, mesh, mesh_overrides)
+            if mesh is not None else None
+        )
+        if mesh is not None:
+            params = place_params(params, cfg, mesh, self._overrides,
+                                  param_axes)
         self.params, self.cfg = params, cfg
         self.num_slots, self.max_len = num_slots, max_len
         self.scfg = scfg or SamplerConfig()
@@ -650,6 +669,13 @@ class ContinuousBatchingEngine:
         self._m_queue_depth = m.gauge("admission_queue_depth")
         self._m_queue_peak = m.gauge("admission_queue_peak")
         self._m_occupancy = m.gauge("batch_occupancy")
+        # mesh shape as gauges (1/1 when serving single-device) so a
+        # metrics snapshot records the parallelism it was measured under
+        mesh_shape = dict(mesh.shape) if mesh is not None else {}
+        m.gauge("mesh_data_parallelism").set(
+            float(mesh_shape.get("data", 1)))
+        m.gauge("mesh_model_parallelism").set(
+            float(mesh_shape.get("model", 1)))
         self._m_ttft = m.histogram("ttft_seconds")
         self._m_itl = m.histogram("itl_seconds")
         self._m_latency = m.histogram("request_latency_seconds")
@@ -693,6 +719,19 @@ class ContinuousBatchingEngine:
             "ngen": jnp.zeros((b,), jnp.int32),
             "budget": jnp.zeros((b,), jnp.int32),
         }
+        if mesh is not None:
+            # paged pools shard over KV heads on `model`; tables, dense
+            # ring caches, and per-slot slot state replicate with the
+            # host-global scheduler
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            with self._mesh_ctx():
+                self._caches = jax.device_put(
+                    self._caches, kv_pool.cache_sharding(self._caches, mesh)
+                )
+            self._state = jax.device_put(
+                self._state, NamedSharding(mesh, PartitionSpec())
+            )
 
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
@@ -738,6 +777,16 @@ class ContinuousBatchingEngine:
         self._set_tables = jax.jit(_make_set_tables_fn(cfg), donate_argnums=(0,))
         self._admit_jit = jax.jit(_admit_state, donate_argnums=(0,))
         self._deactivate_jit = jax.jit(_deactivate, donate_argnums=(0,))
+
+    def _mesh_ctx(self):
+        """Serving sharding rules, active around every compiled-fn call
+        (jit traces at call time in the calling thread, so the rule table
+        must be installed here, not at construction)."""
+        import contextlib
+
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shd.sharding_rules(self.mesh, self._overrides)
 
     # -- observability ------------------------------------------------------
     #
@@ -1117,9 +1166,10 @@ class ContinuousBatchingEngine:
                 continue
             self.deadline_misses += 1
             if rs.n_generated > 0:  # admitting slots were never activated
-                self._state = self._deactivate_jit(
-                    self._state, jnp.asarray(rs.slot)
-                )
+                with self._mesh_ctx():
+                    self._state = self._deactivate_jit(
+                        self._state, jnp.asarray(rs.slot)
+                    )
             self._release_blocks(rs.blocks, req.uid)
             self._slots[rs.slot] = None
             finished.append(self._emit_finished(FinishedRequest(
@@ -1205,9 +1255,10 @@ class ContinuousBatchingEngine:
         The slot stays inactive in decode chunks until the final slice
         samples its first token."""
         if blocks:
-            self._caches = self._set_tables(
-                self._caches, jnp.asarray(slot), self._table_row(blocks)
-            )
+            with self._mesh_ctx():
+                self._caches = self._set_tables(
+                    self._caches, jnp.asarray(slot), self._table_row(blocks)
+                )
         self._slots[slot] = RequestState(
             request=req, slot=slot, blocks=blocks, tokens=[],
             n_generated=0, admitted_at=self.now(), prefilled=0,
@@ -1244,7 +1295,7 @@ class ContinuousBatchingEngine:
         active[rs.slot] = True
         lengths = np.zeros((b,), np.int32)
         lengths[rs.slot] = n
-        with annotate("serve/chunked_prefill"):
+        with annotate("serve/chunked_prefill"), self._mesh_ctx():
             tok_d, self._caches, key_d = self._prefill_chunk(
                 self.params, self._caches, jnp.asarray(toks),
                 jnp.asarray(pos), jnp.asarray(active), jnp.asarray(lengths),
@@ -1277,11 +1328,12 @@ class ContinuousBatchingEngine:
         if done is not None:
             self._slots[rs.slot] = None
             return [done]
-        self._state = self._admit_jit(
-            self._state, jnp.asarray(rs.slot), tok_d[0], key_d,
-            jnp.asarray(s, jnp.int32),
-            jnp.asarray(req.max_new_tokens, jnp.int32),
-        )
+        with self._mesh_ctx():
+            self._state = self._admit_jit(
+                self._state, jnp.asarray(rs.slot), tok_d[0], key_d,
+                jnp.asarray(s, jnp.int32),
+                jnp.asarray(req.max_new_tokens, jnp.int32),
+            )
         rs.tokens = [tok0]
         rs.n_generated = 1
         rs.first_token_at = now
@@ -1319,18 +1371,20 @@ class ContinuousBatchingEngine:
             s = len(req.prompt)
             padded = np.zeros((self._bucket_len(s),), np.int32)
             padded[:s] = req.prompt
-            return self._prefill_bucketed(
+            with self._mesh_ctx():
+                return self._prefill_bucketed(
+                    self.params,
+                    {"tokens": jnp.asarray(padded[None])},
+                    jnp.asarray(s, jnp.int32),
+                    jax.random.PRNGKey(req.seed),
+                )
+        with self._mesh_ctx():
+            return self._prefill(
                 self.params,
-                {"tokens": jnp.asarray(padded[None])},
-                jnp.asarray(s, jnp.int32),
+                {"tokens": jnp.asarray(req.prompt[None])},
+                jnp.asarray(0, jnp.int32),
                 jax.random.PRNGKey(req.seed),
             )
-        return self._prefill(
-            self.params,
-            {"tokens": jnp.asarray(req.prompt[None])},
-            jnp.asarray(0, jnp.int32),
-            jax.random.PRNGKey(req.seed),
-        )
 
     def _admit(
         self, req: Request, slot: int, blocks: list[int]
@@ -1359,13 +1413,14 @@ class ContinuousBatchingEngine:
             self._install_fns[nb] = jax.jit(
                 _make_install_fn(self.cfg, nb), donate_argnums=(0,)
             )
-        self._caches = self._install_fns[nb](
-            self._caches, small, jnp.asarray(slot), table_row
-        )
-        self._state = self._admit_jit(
-            self._state, jnp.asarray(slot), tok0_d[0], key, pos0,
-            jnp.asarray(req.max_new_tokens, jnp.int32),
-        )
+        with self._mesh_ctx():
+            self._caches = self._install_fns[nb](
+                self._caches, small, jnp.asarray(slot), table_row
+            )
+            self._state = self._admit_jit(
+                self._state, jnp.asarray(slot), tok0_d[0], key, pos0,
+                jnp.asarray(req.max_new_tokens, jnp.int32),
+            )
         self._slots[slot] = RequestState(
             request=req, slot=slot, blocks=blocks, tokens=[tok0],
             n_generated=1, admitted_at=now, prefilled=len(req.prompt),
@@ -1408,10 +1463,11 @@ class ContinuousBatchingEngine:
                 self._trace(
                     "block_alloc", uid=rs.request.uid, n_blocks=len(got)
                 )
-                self._caches = self._set_tables(
-                    self._caches, jnp.asarray(rs.slot),
-                    self._table_row(rs.blocks),
-                )
+                with self._mesh_ctx():
+                    self._caches = self._set_tables(
+                        self._caches, jnp.asarray(rs.slot),
+                        self._table_row(rs.blocks),
+                    )
 
     def _pick_victim(self):
         """Youngest live request — including the one asking for blocks:
@@ -1430,9 +1486,10 @@ class ContinuousBatchingEngine:
         self._trace(
             "preempted", uid=rs.request.uid, n_generated=rs.n_generated
         )
-        self._state = self._deactivate_jit(
-            self._state, jnp.asarray(rs.slot)
-        )
+        with self._mesh_ctx():
+            self._state = self._deactivate_jit(
+                self._state, jnp.asarray(rs.slot)
+            )
         self._release_blocks(rs.blocks, rs.request.uid)
         self._slots[rs.slot] = None
         self._queue.appendleft(rs.request)
@@ -1465,13 +1522,15 @@ class ContinuousBatchingEngine:
                     ),
                     donate_argnums=(1, 2),
                 )
-            packed, self._caches, self._state = self._chunk_fn_poison(
-                self.params, self._caches, self._state, poison
-            )
+            with self._mesh_ctx():
+                packed, self._caches, self._state = self._chunk_fn_poison(
+                    self.params, self._caches, self._state, poison
+                )
         else:
-            packed, self._caches, self._state = self._chunk_fn(
-                self.params, self._caches, self._state
-            )
+            with self._mesh_ctx():
+                packed, self._caches, self._state = self._chunk_fn(
+                    self.params, self._caches, self._state
+                )
         return packed
 
     def _process_chunk(self, packed: np.ndarray) -> list[FinishedRequest]:

@@ -13,6 +13,19 @@ Weight classification is by parameter path name:
   1-bit backbone: attention projections, FFN trunk, MoE experts, SSM/RG-LRU
   projections.  8-bit branch: w8_*.  Everything else (embeddings, norms,
   scales, routers, RG-LRU gates, conv, SSD params) stays FP.
+
+Shardability contract (tensor-parallel serving): every exported weight is
+N-major-shardable — the layout keeps N as the LAST axis (``packed`` is
+``(..., K//8, N)`` uint8, ``q`` is ``(..., K, N)`` int8) so slicing the
+last axis yields a valid shard of the same layout, and the AbsMean /
+AbsMax ``scale`` is a per-tensor keepdims scalar (per slice for stacked
+weights) that REPLICATES: a shard dequantizes with the same scalar as the
+whole weight, making each per-shard kernel output a bitwise slice of the
+unsharded result.  ``distributed.sharding.nmajor_param_sharding`` places
+this export on a mesh (only the trailing logical axis shards) and the
+``kernels.ops.*_nshard`` shard_map islands consume it with per-shard GEMV
+tile keys — see ``tests/test_sharded_serving.py`` for the round-trip and
+parity pins.
 """
 
 from __future__ import annotations

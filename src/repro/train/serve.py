@@ -65,9 +65,9 @@ class BatchedServer:
     ``generate_python_loop`` is the legacy per-token host loop, kept as the
     decode-benchmark baseline and the scan-equivalence test oracle."""
 
-    def __init__(self, params, cfg: ModelConfig, max_len: int):
+    def __init__(self, params, cfg: ModelConfig, max_len: int, *, mesh=None):
         self.params, self.cfg, self.max_len = params, cfg, max_len
-        self.engine = DecodeEngine(params, cfg, max_len)
+        self.engine = DecodeEngine(params, cfg, max_len, mesh=mesh)
         self._prefill = jax.jit(make_prefill_step(cfg, max_len))
         self._decode = jax.jit(make_serve_step(cfg))
         self._sample = jax.jit(
