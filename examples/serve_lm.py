@@ -47,6 +47,11 @@ def main():
                     help="serve via the continuous-batching engine "
                          "(ragged prompts, paged KV pool)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable automatic prefix caching (--continuous "
+                         "only): shared prompt prefixes are served from "
+                         "cached KV blocks; every prompt is submitted "
+                         "twice so the second pass demonstrates hits")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="token budget per step for chunked admission "
                          "prefill (--continuous only): long prompts "
@@ -105,20 +110,35 @@ def main():
 
         max_len = args.prompt_len + args.new_tokens
         max_len += (-max_len) % args.block_size
+        num_slots = max(2, args.batch // 2)
+        # the default pool is sized for full slot occupancy with zero
+        # slack — a cache with no headroom evicts every parked block on
+        # the next admission, so give the demo a pool that can retain
+        nb = num_slots * -(-max_len // args.block_size)
         eng = ContinuousBatchingEngine(
-            params, cfg, num_slots=max(2, args.batch // 2), max_len=max_len,
+            params, cfg, num_slots=num_slots, max_len=max_len,
             scfg=scfg, layout="paged", block_size=args.block_size,
             prefill_chunk=args.prefill_chunk, mesh=mesh,
+            prefix_cache=args.prefix_cache,
+            num_blocks=2 * nb if args.prefix_cache else None,
         )
         if args.prefill_chunk and eng.prefill_chunk is None:
             print("note: config is not chunk-safe; one-shot admission")
+        if args.prefix_cache and not eng.prefix_cache:
+            print("note: config declines prefix caching; running cold")
         rng = jax.random
         t0 = time.time()
-        for i in range(args.batch):
-            # ragged prompts: each request its own length and seed
-            s = max(1, args.prompt_len - i % 4)
-            prompt = rng.randint(rng.PRNGKey(i), (s,), 3, cfg.vocab_size)
-            eng.submit(prompt, max_new_tokens=args.new_tokens, seed=i, uid=i)
+        # with --prefix-cache every prompt goes in twice: the repeats
+        # (same prompt+seed, fresh uid) hit the blocks the first pass
+        # cached and must produce the identical stream
+        rounds = 2 if args.prefix_cache else 1
+        for r in range(rounds):
+            for i in range(args.batch):
+                # ragged prompts: each request its own length and seed
+                s = max(1, args.prompt_len - i % 4)
+                prompt = rng.randint(rng.PRNGKey(i), (s,), 3, cfg.vocab_size)
+                eng.submit(prompt, max_new_tokens=args.new_tokens, seed=i,
+                           uid=r * args.batch + i)
         finished = eng.run()
         dt = time.time() - t0
         total = sum(len(f.tokens) for f in finished)
@@ -126,6 +146,18 @@ def main():
               f"tokens in {dt:.1f}s ({total / dt:.1f} tok/s incl. compile); "
               f"pool free {eng.allocator.free_count}/{eng.num_blocks}, "
               f"{eng.preemptions} preemptions")
+        if eng.prefix_cache:
+            c = eng.snapshot()["counters"]
+            streams = {}
+            match = all(
+                streams.setdefault(f.uid % args.batch, f.tokens.tolist())
+                == f.tokens.tolist() for f in finished
+            )
+            print(f"prefix cache: {c['prefix_cache_hits_total']} hits / "
+                  f"{c['prefix_cache_misses_total']} misses, "
+                  f"{c['prefix_cache_hit_tokens_total']} tokens reused, "
+                  f"{c['prefix_cache_cow_total']} CoW; repeat streams "
+                  f"identical: {match}")
         for f in sorted(finished, key=lambda f: f.uid)[:4]:
             print(f"  request {f.uid} ({f.finish_reason}): "
                   f"{f.tokens.tolist()}")

@@ -123,6 +123,52 @@ chunk boundaries, non-finite logits quarantine only the poisoned stream
 watchdog raises :class:`~repro.serve.scheduler.SchedulerStall` instead of
 spinning when no progress is possible.
 
+Prefix caching (``prefix_cache=True``, paged layout only) — KV blocks
+gain content identity and a second lifecycle that overlays the request
+state machine.  Every full prompt block is named by the chain hash
+``hash((parent_hash, block_tokens))`` over the HOST token stream (mesh-
+and layout-independent), and each block walks::
+
+                 alloc (miss)                register
+    blank ────────────────────▶ private ──────────────▶ cached+referenced
+      ▲                            │                      │           ▲
+      │ LRU eviction               │ unref                │ unref     │ ref
+      │ (hash entry dies)          ▼                      ▼           │ (hit)
+      └───────────────────── blank pool            cached+unreferenced
+                                                     (parked on LRU,
+                                                      still hittable)
+
+* **hit** — admission walks the prompt's block-hash chain through the
+  allocator's index; every *leading* hit is taken by ``ref`` (refcount++,
+  off the LRU) before the tail is allocated, so an admission can never
+  evict its own hits.  Only the unshared suffix is prefilled — bitwise
+  the full prefill, which is why streams stay bit-for-bit identical to a
+  cold engine (``tests/test_prefix_cache.py``).
+* **miss** — the tail blocks come from the blank pool first, then by
+  evicting the least-recently-released refcount-0 cached block (its hash
+  entry dies with it: ``prefix_cache_evictions_total``).  A block
+  registers into the index only once its pages are fully written and
+  will receive no more writes; on release the chain extends over
+  *generated* tokens, so multi-turn follow-ups hit the whole previous
+  conversation.
+* **CoW** — a block-aligned fully-cached prompt still recomputes its
+  final position (the sampler needs those logits), which would write
+  inside the last shared block: admission copies that page to a private
+  block first (``prefix_cache_cow_total``; trace event ``block_cow``),
+  so no slot ever mutates a page another slot references.
+* **unref** — "free" is refcount decrement: a released shared block
+  stays resident for its other owners, and a refcount-0 *cached* block
+  parks on the LRU — still hittable, still counted free
+  (``free_count = blank + parked``), so a drained engine reconciles to
+  ``pool_blocks_used == 0`` with a warm cache.
+
+Configs whose recurrent state lives outside the paged pool (sliding-
+window rings, SSM/rec state, MLA latents) or whose routing couples
+tokens (MoE, VLM prefixes) decline the cache with one warning and run
+cold.  Hits/misses/reused tokens are exported as
+``prefix_cache_{hits,misses,hit_tokens}_total`` and admission hits land
+on the request trace as ``prefix_hit`` events.
+
 Fault injection (:mod:`repro.serve.faults`) drives all of this
 deterministically for tests and chaos runs::
 

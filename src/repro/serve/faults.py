@@ -195,6 +195,10 @@ class FaultInjector:
 
     # -- schedule generation ------------------------------------------------
 
+    #: Fault kinds :meth:`random` can draw, in draw order (the default
+    #: tuple reproduces the historical 0..3 integer mapping bit for bit).
+    KINDS = ("alloc", "preempt", "poison", "delay")
+
     @classmethod
     def random(
         cls,
@@ -206,18 +210,32 @@ class FaultInjector:
         max_alloc: int = 48,
         max_gen: int = 8,
         max_delay: float = 4.0,
+        kinds=KINDS,
     ) -> "FaultInjector":
         """A seeded random schedule over ``uids`` — the chaos suite's
         entry point.  Same (seed, uids, knobs) -> same schedule, bit for
-        bit, with every fault kind represented in expectation."""
+        bit, with every requested fault kind represented in expectation.
+
+        ``kinds`` restricts (and weights, by repetition) which fault
+        kinds are drawn — e.g. ``kinds=("alloc", "preempt")`` produces
+        the allocation-failure + forced-preemption schedules the
+        prefix-sharing chaos suite hammers shared blocks with: every
+        admission walk can be denied blocks and every live request can be
+        preempted *while other slots still hold references to its
+        blocks*, without poison/delay faults diluting the schedule."""
+        bad = set(kinds) - set(cls.KINDS)
+        if bad:
+            raise ValueError(f"unknown fault kinds {sorted(bad)!r}")
+        if not kinds:
+            raise ValueError("kinds must name at least one fault kind")
         rng = np.random.default_rng(seed)
         uids = list(uids)
         faults: list[Fault] = []
         for _ in range(n_faults):
-            kind = int(rng.integers(0, 4))
-            if kind == 0:
+            kind = kinds[int(rng.integers(0, len(kinds)))]
+            if kind == "alloc":
                 faults.append(AllocFailure(int(rng.integers(0, max_alloc))))
-            elif kind == 1:
+            elif kind == "preempt":
                 uid = (
                     int(rng.choice(uids)) if uids and rng.integers(0, 2)
                     else None
@@ -225,13 +243,13 @@ class FaultInjector:
                 faults.append(
                     ForcePreempt(int(rng.integers(0, max_step)), uid)
                 )
-            elif kind == 2 and uids:
+            elif kind == "poison" and uids:
                 faults.append(
                     PoisonLogits(
                         int(rng.choice(uids)), int(rng.integers(1, max_gen))
                     )
                 )
-            elif uids:
+            elif kind == "delay" and uids:
                 faults.append(
                     DelayArrival(
                         int(rng.choice(uids)),

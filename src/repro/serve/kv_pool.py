@@ -194,13 +194,67 @@ def read(pool: Array, table: Array, blocks: int | None = None) -> Array:
     return g.reshape(b, nb * bs, *g.shape[3:])
 
 
+def hash_block_tokens(parent: int | None, tokens) -> int:
+    """Content identity of one FULL block: a chain hash of
+    ``(parent_hash, block_tokens)``.
+
+    The hash is computed over the HOST token stream (never over pool
+    bytes), so two prompts share a block id exactly when they share the
+    token prefix up to and including this block — and the identity is
+    independent of dtype, mesh shape, or how the pool happens to be
+    sharded.  ``parent`` is ``None`` for the first block of a prompt.
+    """
+    return hash((parent, tuple(int(t) for t in tokens)))
+
+
+def prompt_block_hashes(tokens, block_size: int) -> list[int]:
+    """Chain hashes for every *full* block of a token stream (the trailing
+    partial block has no content identity — it is still being written)."""
+    bs = int(block_size)
+    out: list[int] = []
+    parent: int | None = None
+    for i in range(len(tokens) // bs):
+        parent = hash_block_tokens(parent, tokens[i * bs : (i + 1) * bs])
+        out.append(parent)
+    return out
+
+
+def copy_block(pool: Array, src, dst) -> Array:
+    """``pool[dst] = pool[src]`` — one page copied inside the pool.  This
+    is the copy-on-write primitive: a slot that must write inside a shared
+    block first duplicates the page into a private block, so the shared
+    page (and every other slot reading it) is never mutated."""
+    return pool.at[dst].set(pool[src])
+
+
 class BlockAllocator:
-    """Host-side free-list over the pool's block ids.
+    """Host-side ref-counted free list over the pool's block ids, with
+    content-hash identity and an LRU of reusable (cached) blocks.
 
     The allocator is the single source of truth for block ownership: the
-    scheduler allocates at admission / chunk boundaries and frees on
-    eviction.  ``free_count`` + outstanding == ``num_blocks`` always — the
-    reclamation test asserts no blocks leak across a full trace.
+    scheduler allocates at admission / chunk boundaries and *unrefs* on
+    eviction.  Each block carries a refcount (shared prefix blocks are
+    held by several slots at once) and, optionally, a content hash
+    registered by the scheduler once the block's pages are fully written.
+    A block whose refcount drops to zero is not forgotten: if it has a
+    registered hash it parks on an LRU list, still indexed by
+    ``lookup``, until :meth:`alloc` reclaims it (never-hashed blocks go
+    straight back to the blank free list).  So "free" really means
+    "unreferenced", and ``free_count`` counts *allocatable* blocks —
+    blank + cached — which keeps the drain invariant
+    ``free_count == num_blocks`` (and ``pool_blocks_used == 0``) intact
+    even with a warm cache.
+
+    Invariants (pinned by the property suite in ``tests/test_kv_pool.py``):
+
+    * conservation — ``free_count + used_count == num_blocks`` at every
+      step, where ``used_count`` counts blocks with refcount > 0;
+    * eviction only ever reclaims refcount-0 blocks (live blocks are
+      never on the LRU);
+    * every hash-map entry points at a live-or-cached block (eviction
+      drops the hash entries of the block it reclaims);
+    * double-unref detection is O(1) (the refcount is the check — no
+      membership scan of a free list).
 
     ``fail_hook`` is the fault-injection seam (see
     :mod:`repro.serve.faults`): a callable consulted once per ``alloc``
@@ -211,16 +265,26 @@ class BlockAllocator:
     ``metrics`` is an optional :class:`repro.serve.metrics.MetricsRegistry`
     (duck-typed — this module stays dependency-free): when set, the
     allocator keeps the ``pool_blocks_used`` gauge exact at every
-    alloc/free (utilization is maintained at the source of truth, so it
+    alloc/unref (utilization is maintained at the source of truth, so it
     provably returns to zero after a drain) and counts
-    ``block_allocs_total`` (blocks handed out) and
-    ``block_alloc_failures_total`` (exhaustion + injected failures).
+    ``block_allocs_total`` (blocks handed out),
+    ``block_alloc_failures_total`` (exhaustion + injected failures) and
+    ``prefix_cache_evictions_total`` (cached blocks reclaimed by alloc).
+    Each metric is guarded independently — a registry that hands back
+    only some instruments still gets the ones it asked for.
     """
 
     def __init__(self, num_blocks: int, fail_hook=None, metrics=None):
         self.num_blocks = num_blocks
         self.fail_hook = fail_hook
-        self._free = list(range(num_blocks - 1, -1, -1))  # pop() -> low ids
+        self._ref = [0] * num_blocks  # refcount per block id
+        self._blank = list(range(num_blocks - 1, -1, -1))  # pop() -> low ids
+        # refcount-0 blocks that still hold registered content, in release
+        # order (dict preserves insertion order): front = least recently
+        # released = first evicted.
+        self._lru: dict[int, None] = {}
+        self._hash_of: dict[int, int] = {}  # block id -> content hash
+        self._block_of: dict[int, int] = {}  # content hash -> block id
         self._g_used = metrics.gauge("pool_blocks_used") if metrics else None
         self._c_allocs = (
             metrics.counter("block_allocs_total") if metrics else None
@@ -228,36 +292,130 @@ class BlockAllocator:
         self._c_fail = (
             metrics.counter("block_alloc_failures_total") if metrics else None
         )
+        self._c_evict = (
+            metrics.counter("prefix_cache_evictions_total") if metrics else None
+        )
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: blank + cached (refcount-0, evictable)."""
+        return len(self._blank) + len(self._lru)
+
+    @property
+    def used_count(self) -> int:
+        """Blocks with refcount > 0 (owned by at least one slot)."""
+        return self.num_blocks - self.free_count
+
+    @property
+    def cached_count(self) -> int:
+        """Blocks with a registered content hash (live or parked)."""
+        return len(self._block_of)
+
+    def refcount(self, i: int) -> int:
+        return self._ref[i]
 
     def _mark_fail(self) -> None:
         if self._c_fail is not None:
             self._c_fail.inc()
 
+    def _set_used_gauge(self) -> None:
+        if self._g_used is not None:
+            self._g_used.set(self.used_count)
+
     def alloc(self, n: int) -> list[int] | None:
-        """n block ids, or None (and no change) if the pool is exhausted
-        (or a fault-injection hook says to pretend it is)."""
+        """n block ids at refcount 1, or None (and no ownership change) if
+        the pool is exhausted (or a fault-injection hook says to pretend
+        it is).  Blank blocks are handed out first; when they run out the
+        least-recently-released cached block is evicted — its hash-map
+        entries die with it, so the index never points at a reclaimed
+        block.  Refcount>0 blocks are never candidates."""
         if self.fail_hook is not None and self.fail_hook():
             self._mark_fail()
             return None
-        if n > len(self._free):
+        if n > self.free_count:
             self._mark_fail()
             return None
-        got = [self._free.pop() for _ in range(n)]
-        if self._g_used is not None:
-            self._g_used.set(self.num_blocks - len(self._free))
+        got = []
+        for _ in range(n):
+            if self._blank:
+                i = self._blank.pop()
+            else:
+                i = next(iter(self._lru))  # least recently released
+                del self._lru[i]
+                del self._block_of[self._hash_of.pop(i)]
+                if self._c_evict is not None:
+                    self._c_evict.inc()
+            self._ref[i] = 1
+            got.append(i)
+        self._set_used_gauge()
+        if self._c_allocs is not None:
             self._c_allocs.inc(n)
         return got
 
-    def free(self, ids) -> None:
-        for i in ids:
+    def unref(self, ids) -> None:
+        """Drop one reference per id.  A block reaching refcount 0 parks
+        on the LRU if its content is registered (a future admission can
+        still hit it), else returns to the blank list.  Double-unref is an
+        error, detected in O(1) from the refcount — no free-list scan."""
+        pending: dict[int, int] = {}
+        for i in ids:  # validate everything before mutating anything
             if not 0 <= i < self.num_blocks:
                 raise ValueError(f"block id {i} out of range")
-            if i in self._free:
+            pending[i] = pending.get(i, 0) + 1
+            if pending[i] > self._ref[i]:
                 raise ValueError(f"double free of block {i}")
-        self._free.extend(ids)
-        if self._g_used is not None:
-            self._g_used.set(self.num_blocks - len(self._free))
+        for i in ids:
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                if i in self._hash_of:
+                    self._lru[i] = None  # most recently released -> back
+                else:
+                    self._blank.append(i)
+        self._set_used_gauge()
+
+    # "free" predates the refcounts; release paths still call it, and for
+    # never-shared blocks it behaves exactly as before (ref 1 -> blank).
+    free = unref
+
+    def ref(self, i: int) -> None:
+        """Take one reference on a live or cached block (an admission hit
+        calls this for every reused block).  Reviving a cached block pulls
+        it off the LRU so it can no longer be evicted."""
+        if not 0 <= i < self.num_blocks:
+            raise ValueError(f"block id {i} out of range")
+        if self._ref[i] == 0:
+            if i not in self._lru:
+                raise ValueError(f"block {i} is blank — nothing to share")
+            del self._lru[i]
+        self._ref[i] += 1
+        self._set_used_gauge()
+
+    def lookup(self, h: int) -> int | None:
+        """Block id currently holding content ``h``, or None.  Does not
+        take a reference — callers :meth:`ref` each hit before any
+        further alloc so their own tail allocation cannot evict it."""
+        return self._block_of.get(h)
+
+    def register(self, i: int, h: int) -> bool:
+        """Record that live block ``i`` now holds content ``h`` (its pages
+        are fully written).  First writer wins: if ``h`` is already mapped
+        to another block, this one simply stays private (returns False)
+        and will recycle as blank.  Re-registering the same (block, hash)
+        is a no-op; re-registering a block under a *different* hash is a
+        bug — block content never changes while registered."""
+        if not 0 <= i < self.num_blocks:
+            raise ValueError(f"block id {i} out of range")
+        if self._ref[i] <= 0:
+            raise ValueError(f"register of unreferenced block {i}")
+        cur = self._hash_of.get(i)
+        if cur is not None:
+            if cur != h:
+                raise ValueError(
+                    f"block {i} re-registered under a different hash"
+                )
+            return True
+        if h in self._block_of:
+            return False
+        self._hash_of[i] = h
+        self._block_of[h] = i
+        return True

@@ -34,10 +34,18 @@ advances virtual time — no real sleeping), :class:`MonotonicClock` wraps
 latency math).  Both satisfy the scheduler's clock protocol: ``now()``
 plus an optional ``sleep(dt)``.
 
+Prefix-cache metrics (wired by the ref-counted prefix-caching engine):
+``prefix_cache_hits_total`` / ``prefix_cache_misses_total`` count
+full-prompt-block hits/misses at the admission hash walk,
+``prefix_cache_hit_tokens_total`` the prompt tokens whose prefill was
+skipped, ``prefix_cache_cow_total`` copy-on-write page copies, and
+``prefix_cache_evictions_total`` cached (refcount-0) blocks reclaimed by
+the allocator's LRU.  All are registered unconditionally by the engine /
+allocator, so a snapshot carries the hit rate even when caching is off.
+
 Reserved metric names (wired by upcoming PRs — see ROADMAP):
-``prefix_cache_hits_total`` / ``prefix_cache_misses_total`` (ref-counted
-prefix caching) and ``spec_tokens_proposed_total`` /
-``spec_tokens_accepted_total`` (self-speculative decoding).
+``spec_tokens_proposed_total`` / ``spec_tokens_accepted_total``
+(self-speculative decoding).
 """
 
 from __future__ import annotations

@@ -27,8 +27,24 @@ on-device sampling) but gives every slot its own lifecycle:
   tracked as on-device masks, and finished slots produce **no cache
   writes** (that is what makes reclaiming their blocks safe).
 * **eviction** — at the chunk boundary finished requests leave their slot,
-  their blocks return to the allocator's free list, and the next queued
+  their block references return to the allocator, and the next queued
   request is admitted into the hole.
+* **prefix caching** (``prefix_cache=True``, paged layout) — full prompt
+  blocks carry a content identity (chain hash of ``(parent_hash,
+  block_tokens)`` over the HOST token stream — mesh-shape-independent by
+  construction) registered in the allocator once their pages are fully
+  written.  Admission walks the prompt's chain through the hash index and
+  reuses every leading hit by bumping its refcount; only the unshared
+  suffix is prefilled (one padded ``forward_chunk`` slice on the one-shot
+  path, or chunked-prefill slices starting at the cached boundary), so a
+  cache-hit request's TTFT collapses to its suffix.  Release paths unref:
+  a refcount-0 registered block parks on an LRU — still hittable — until
+  ``alloc`` evicts it; a fully-cached prompt copies-on-write its final
+  hit block before recomputing the last prompt position, so shared pages
+  are never mutated.  On release the chain extends over generated tokens,
+  so multi-turn follow-ups hit the whole previous conversation.  Streams
+  stay bit-for-bit the cold path's (same key-split order, and
+  suffix-resume is exactly the chunked-prefill parity property).
 
 Determinism contract: each request carries its own seed, and admission
 prefill (one-shot, bucketed or chunked) + per-slot key-splitting reproduce
@@ -193,7 +209,13 @@ class RequestState:
     still streams in: ``prefilled`` counts prompt tokens already resident
     in the cache, and ``n_generated == 0`` marks the slot as admitting
     (inactive in decode chunks) until the final slice samples the first
-    token."""
+    token.
+
+    With prefix caching, ``block_hashes`` holds the chain hashes of the
+    stream's full blocks (prompt blocks at admission, extended over
+    generated tokens at release) and ``registered`` counts the leading
+    blocks already present in the allocator's hash index — admission hits
+    plus blocks registered once their pages were fully written."""
 
     request: Request
     slot: int
@@ -205,6 +227,8 @@ class RequestState:
     first_token_at: float = 0.0
     done: bool = False
     finish_reason: str = ""
+    block_hashes: list[int] = dataclasses.field(default_factory=list)
+    registered: int = 0
 
     @property
     def pos(self) -> int:
@@ -297,6 +321,31 @@ def _make_install_fn(cfg: ModelConfig, nb: int):
         return _map_blocks(cfg, blockfn, big, small)
 
     return install
+
+
+def _make_copy_block_fn(cfg: ModelConfig):
+    """Copy one pool page (``src`` -> ``dst``) in every paged layer's K and
+    V pools — the engine-level copy-on-write primitive.  A slot about to
+    write inside a *shared* block (the fully-cached-prompt case recomputes
+    the last prompt position, which lives in the final hit block) first
+    duplicates that page into a private block and repoints its table row,
+    so a registered page is never mutated while other slots may read it."""
+
+    def copy(big, src, dst):
+        def blockfn(spec, stacked, bigc):
+            if "table" not in bigc:
+                return bigc
+
+            def cp(pool):
+                return kv_pool.copy_block(pool, src, dst)
+
+            if stacked:
+                cp = jax.vmap(cp)
+            return dict(bigc, kpool=cp(bigc["kpool"]), vpool=cp(bigc["vpool"]))
+
+        return _map_blocks(cfg, blockfn, big)
+
+    return copy
 
 
 def _make_set_tables_fn(cfg: ModelConfig):
@@ -467,6 +516,50 @@ def _chunked_prefill_safe(cfg: ModelConfig) -> bool:
     return True
 
 
+def _prefix_cache_safe(cfg: ModelConfig) -> bool:
+    """Whether shared prompt blocks may be reused across requests without
+    changing any request's stream.
+
+    Safe exactly when the *paged pool holds the whole recurrent state of a
+    prefix*: every mixer is pure global attention (``window == 0``), so
+    reusing the hit blocks and running only the unshared suffix is
+    bitwise the full prefill (the chunked-prefill parity property, with
+    the prefix slices computed by an earlier request).  Unsafe, declining
+    to one-shot cold admission:
+
+    * sliding-window / ssm / rec / MLA mixers: their dense ring or latent
+      caches are per-slot — a reused pool block would leave that state
+      unpopulated for the hitting slot;
+    * MoE / routed branches / VLM prefixes: same coupling that makes
+      slicing unsafe (:func:`_chunked_prefill_safe`).
+    """
+    if cfg.moe or cfg.quant.num_experts > 1 or cfg.n_image_tokens > 0:
+        return False
+    for seg in build_segments(cfg):
+        for spec in seg.blocks:
+            if spec.mixer != "attn" or spec.window != 0:
+                return False
+    return True
+
+
+_PREFIX_DECLINE_LOGGED: set[tuple] = set()
+
+
+def _log_prefix_cache_decline(cfg: ModelConfig) -> None:
+    key = _chunk_decline_key(cfg) + tuple(
+        spec.window for seg in build_segments(cfg) for spec in seg.blocks
+    )
+    if key in _PREFIX_DECLINE_LOGGED:
+        return
+    _PREFIX_DECLINE_LOGGED.add(key)
+    _log.warning(
+        "config %r: prefix caching declined (a mixer keeps per-slot state "
+        "outside the paged pool, or routing couples tokens); admissions "
+        "run cold",
+        cfg.name,
+    )
+
+
 def _bucketed_prefill_safe(cfg: ModelConfig, max_len: int) -> bool:
     """Whether admission prefill may right-pad prompts to a shared bucket
     length without changing any request's stream.
@@ -554,6 +647,26 @@ class ContinuousBatchingEngine:
         prompt length.  Configs where slicing would change streams
         (recurrent mixers, MoE/routed branches, VLM prefixes — see
         :func:`_chunked_prefill_safe`) fall back to one-shot admission.
+    prefix_cache : enable automatic prefix caching (paged layout only —
+        requesting it with ``layout="dense"`` raises).  Each full prompt
+        block gets a content identity — the chain hash of
+        ``(parent_hash, block_tokens)`` over the HOST token stream, so
+        hits are mesh-shape-independent by construction — and admission
+        walks the prompt's block chain through the allocator's hash
+        index: every leading hit is reused by bumping its refcount, and
+        only the unshared suffix is prefilled (one padded
+        ``forward_chunk`` slice on the one-shot path; chunked prefill
+        simply starts its slices at the cached boundary), collapsing
+        TTFT for cache-hit requests.  Release paths unref instead of
+        freeing — a refcount-0 block with registered content parks on the
+        allocator's LRU, still hittable, until ``alloc`` reclaims it.  A
+        fully-cached prompt copies-on-write its final hit block before
+        recomputing the last prompt position, so a shared page is never
+        mutated.  Streams are bit-for-bit the cold path's (the
+        chunked-prefill parity property — which is also why configs
+        failing :func:`_prefix_cache_safe` decline with a log and run
+        cold).  Hit/miss/CoW/eviction land on the
+        ``prefix_cache_*_total`` counters and the request trace.
     clock : optional clock — a bare callable returning seconds, or an
         object with ``now()`` and optionally ``sleep(dt)`` (see
         :func:`repro.serve.metrics.resolve_clock`;
@@ -598,6 +711,7 @@ class ContinuousBatchingEngine:
         num_blocks: Optional[int] = None,
         chunk: int = 8,
         prefill_chunk: Optional[int] = None,
+        prefix_cache: bool = False,
         clock: Optional[Callable[[], float]] = None,
         max_queue: Optional[int] = None,
         overload_policy: str = "reject",
@@ -617,6 +731,11 @@ class ContinuousBatchingEngine:
             raise ValueError("max_len must be a multiple of block_size")
         if overload_policy not in ("reject", "shed_oldest"):
             raise ValueError(f"unknown overload policy {overload_policy!r}")
+        if prefix_cache and layout != "paged":
+            raise ValueError(
+                "prefix_cache requires the paged layout (content-hash "
+                "identity lives on pool blocks)"
+            )
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         # tensor-parallel serving: params go down N-major over the model
@@ -679,6 +798,13 @@ class ContinuousBatchingEngine:
         self._m_ttft = m.histogram("ttft_seconds")
         self._m_itl = m.histogram("itl_seconds")
         self._m_latency = m.histogram("request_latency_seconds")
+        # prefix-cache counters are registered unconditionally (zero when
+        # caching is off/declined) so every snapshot — and the CI metrics
+        # artifact — carries the hit rate schema-stably
+        self._m_pc_hits = m.counter("prefix_cache_hits_total")
+        self._m_pc_misses = m.counter("prefix_cache_misses_total")
+        self._m_pc_hit_tokens = m.counter("prefix_cache_hit_tokens_total")
+        self._m_pc_cow = m.counter("prefix_cache_cow_total")
         m.register_collector(_tile_cache_stats)
         self.allocator = (
             kv_pool.BlockAllocator(
@@ -744,6 +870,22 @@ class ContinuousBatchingEngine:
         )
         if prefill_chunk is not None and self.prefill_chunk is None:
             _log_chunked_prefill_decline(cfg)
+        # automatic prefix caching: paged-only (checked above), and only
+        # where block reuse is stream-invisible (_prefix_cache_safe) —
+        # requested-but-unsafe configs decline with a log and run cold
+        self.prefix_cache = bool(prefix_cache) and _prefix_cache_safe(cfg)
+        if prefix_cache and not self.prefix_cache:
+            _log_prefix_cache_decline(cfg)
+        # cache-hit admission on the one-shot path: one padded
+        # forward_chunk slice over the unshared suffix, compiled per
+        # power-of-two suffix bucket (same program family — and the same
+        # key-split order — as chunked prefill, so streams are bitwise
+        # the cold path's)
+        self._suffix_fns: dict[int, Callable] = {}
+        self._copy_block_fn = (
+            jax.jit(_make_copy_block_fn(cfg), donate_argnums=(0,))
+            if self.prefix_cache else None
+        )
         self._prefill_chunk = (
             jax.jit(
                 _make_prefill_chunk_fn(cfg, self.scfg, self.prefill_chunk),
@@ -857,10 +999,13 @@ class ContinuousBatchingEngine:
             self.tracer.emit(event, t=self.now(), uid=uid, **fields)
 
     def _release_blocks(self, blocks: list[int], uid: int) -> None:
-        """Return a request's blocks to the allocator (the one free path,
-        so every reclamation lands on the trace timeline)."""
+        """Drop a request's references on its blocks (the one release
+        path, so every reclamation lands on the trace timeline).  With
+        prefix caching this is an *unref*: a registered block whose last
+        reference drops parks on the allocator's LRU — still hittable —
+        instead of being forgotten; shared blocks simply lose one owner."""
         if blocks:
-            self.allocator.free(blocks)
+            self.allocator.unref(blocks)
             self._trace("block_free", uid=uid, n_blocks=len(blocks))
 
     # -- construction -------------------------------------------------------
@@ -1170,6 +1315,7 @@ class ContinuousBatchingEngine:
                     self._state = self._deactivate_jit(
                         self._state, jnp.asarray(rs.slot)
                     )
+            self._register_blocks(rs)
             self._release_blocks(rs.blocks, req.uid)
             self._slots[rs.slot] = None
             finished.append(self._emit_finished(FinishedRequest(
@@ -1212,15 +1358,15 @@ class ContinuousBatchingEngine:
             if req is None:
                 break
             blocks: list[int] = []
+            prefilled0, hashes, n_hit = 0, [], 0
             if self.allocator is not None:
-                nb = kv_pool.blocks_for(len(req.prompt), self.block_size)
-                got = self.allocator.alloc(nb)
-                if got is None:
+                res = self._alloc_prompt_blocks(req)
+                if res is None:
                     # pool full: requeue at the head, wait for evictions
                     self._queue.appendleft(req)
                     break
-                blocks = got
-                self._trace("block_alloc", uid=req.uid, n_blocks=len(got))
+                blocks, prefilled0, hashes, n_hit = res
+                self._trace("block_alloc", uid=req.uid, n_blocks=len(blocks))
             self.admissions += 1
             if req.uid in self._admitted_uids:
                 self._m_restarts.inc()  # re-admission after preemption
@@ -1229,12 +1375,116 @@ class ContinuousBatchingEngine:
                 "admitted", uid=req.uid, slot=free[0], n_blocks=len(blocks)
             )
             if self.prefill_chunk is not None:
-                self._admit_chunked(req, free[0], blocks)
+                self._admit_chunked(
+                    req, free[0], blocks, prefilled0, hashes, n_hit
+                )
+            elif prefilled0 > 0:
+                done = self._admit_cached(
+                    req, free[0], blocks, prefilled0, hashes, n_hit
+                )
+                if done is not None:
+                    finished.append(done)
             else:
-                done = self._admit(req, free[0], blocks)
+                done = self._admit(req, free[0], blocks, hashes)
                 if done is not None:
                     finished.append(done)
         return finished
+
+    def _alloc_prompt_blocks(self, req: Request):
+        """Blocks covering an admitting prompt, or None if the pool cannot
+        satisfy the request right now (nothing changes beyond LRU recency
+        on failure — ownership is untouched).
+
+        With prefix caching this is the admission hit-walk: the prompt's
+        full-block chain hashes are looked up in the allocator's index,
+        every *leading* hit is reused by taking a reference (before the
+        tail allocation, so our own alloc can never evict our hits), and
+        only the miss/partial tail is allocated.  A block-aligned fully-
+        cached prompt still recomputes its last position (the sampler
+        needs those logits), which would write inside the final shared
+        block — that block is copied-on-write to a private page first.
+
+        Returns ``(blocks, prefilled0, hashes, n_hit)``: the slot's block
+        list, how many leading prompt tokens are already resident,
+        the prompt's full-block chain hashes, and how many leading blocks
+        came from the cache."""
+        s = len(req.prompt)
+        nb = kv_pool.blocks_for(s, self.block_size)
+        if not self.prefix_cache:
+            got = self.allocator.alloc(nb)
+            return (got, 0, [], 0) if got is not None else None
+        hashes = kv_pool.prompt_block_hashes(req.prompt, self.block_size)
+        hits: list[int] = []
+        for h in hashes:
+            b = self.allocator.lookup(h)
+            if b is None:
+                break
+            hits.append(b)
+        for b in hits:
+            self.allocator.ref(b)
+        cached = len(hits) * self.block_size
+        cow = cached == s  # fully cached: last position lives in a hit block
+        got = self.allocator.alloc(nb - len(hits) + (1 if cow else 0))
+        if got is None:
+            self.allocator.unref(hits)
+            return None
+        self._m_pc_hits.inc(len(hits))
+        self._m_pc_misses.inc(len(hashes) - len(hits))
+        blocks = hits + got
+        prefilled0 = min(cached, s - 1)
+        self._m_pc_hit_tokens.inc(prefilled0)
+        if cow:
+            src, dst = blocks[len(hits) - 1], blocks.pop()
+            with annotate("serve/prefix_cow"), self._mesh_ctx():
+                self._caches = self._copy_block_fn(
+                    self._caches, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32),
+                )
+            blocks[len(hits) - 1] = dst
+            self.allocator.unref([src])
+            self._m_pc_cow.inc()
+            self._trace("block_cow", uid=req.uid, src=src, dst=dst)
+        if hits:
+            self._trace(
+                "prefix_hit", uid=req.uid, n_blocks=len(hits),
+                n_tokens=prefilled0,
+            )
+        return blocks, prefilled0, hashes, len(hits)
+
+    def _register_blocks(self, rs: RequestState) -> None:
+        """Register every full block whose pages are fully written (and
+        will receive no further writes) in the allocator's hash index, so
+        later admissions can hit them.  Prompt blocks register as prefill
+        slices cover them; on release the chain extends over *generated*
+        tokens too, so a multi-turn follow-up prompt (history + reply)
+        hits the whole previous conversation.  The last sampled token's
+        KV is written only when the token is fed, so decode coverage
+        stops one short of ``n_generated``."""
+        if not self.prefix_cache:
+            return
+        bs = self.block_size
+        req = rs.request
+        s = len(req.prompt)
+        covered = (
+            s + rs.n_generated - 1 if rs.n_generated > 0 else rs.prefilled
+        )
+        n_full = min(covered // bs, len(rs.blocks))
+        if rs.registered >= n_full:
+            return
+        h = rs.block_hashes
+        if len(h) < n_full:  # extend the chain over generated tokens
+            stream = np.concatenate(
+                [req.prompt, np.asarray(rs.tokens, np.int32)]
+            )
+            while len(h) < n_full:
+                i = len(h)
+                h.append(kv_pool.hash_block_tokens(
+                    h[i - 1] if i else None, stream[i * bs : (i + 1) * bs]
+                ))
+        while rs.registered < n_full:
+            i = rs.registered
+            self.allocator.register(rs.blocks[i], h[i])
+            rs.registered += 1
 
     def _pop_ready(self) -> Optional[Request]:
         """Pop the first queued request that has arrived.  The head case is
@@ -1249,11 +1499,16 @@ class ContinuousBatchingEngine:
                 return r
         return None
 
-    def _admit_chunked(self, req: Request, slot: int, blocks: list[int]):
+    def _admit_chunked(
+        self, req: Request, slot: int, blocks: list[int],
+        prefilled0: int = 0, hashes=(), n_hit: int = 0,
+    ):
         """Occupy a slot without running prefill: install the slot's block
         table (paged) and let :meth:`_prefill_tick` stream the prompt in.
         The slot stays inactive in decode chunks until the final slice
-        samples its first token."""
+        samples its first token.  A prefix-cache hit just starts the slice
+        cursor at the cached boundary (``prefilled0``) — the tick path is
+        oblivious to where the resident prefix came from."""
         if blocks:
             with self._mesh_ctx():
                 self._caches = self._set_tables(
@@ -1261,7 +1516,8 @@ class ContinuousBatchingEngine:
                 )
         self._slots[slot] = RequestState(
             request=req, slot=slot, blocks=blocks, tokens=[],
-            n_generated=0, admitted_at=self.now(), prefilled=0,
+            n_generated=0, admitted_at=self.now(), prefilled=prefilled0,
+            block_hashes=list(hashes), registered=n_hit,
         )
 
     def _prefill_tick(self) -> list[FinishedRequest]:
@@ -1303,6 +1559,10 @@ class ContinuousBatchingEngine:
             )
         rs.prefilled += n
         self.prefill_tokens += n
+        # blocks this slice just finished filling become hittable (their
+        # writes are dispatched; device program order makes later readers
+        # safe even while this prompt is still streaming in)
+        self._register_blocks(rs)
         self._trace(
             "prefill_chunk", uid=req.uid, prefilled=rs.prefilled, total=s
         )
@@ -1364,6 +1624,86 @@ class ContinuousBatchingEngine:
             b <<= 1
         return min(b, self.max_len)
 
+    def _suffix_fn(self, t: int) -> Callable:
+        """The compiled cache-hit admission slice for suffix bucket ``t``
+        (lazily jitted; one trace per power-of-two suffix length)."""
+        fn = self._suffix_fns.get(t)
+        if fn is None:
+            fn = jax.jit(
+                _make_prefill_chunk_fn(self.cfg, self.scfg, t),
+                donate_argnums=(1,),
+            )
+            self._suffix_fns[t] = fn
+        return fn
+
+    def _admit_cached(
+        self, req: Request, slot: int, blocks: list[int],
+        prefilled0: int, hashes: list[int], n_hit: int,
+    ) -> Optional[FinishedRequest]:
+        """One-shot admission on a prefix-cache hit: the first
+        ``prefilled0`` prompt tokens are already resident in the reused
+        blocks, so only the unshared suffix runs — ONE padded
+        ``forward_chunk`` slice into the big caches, exactly the program
+        family chunked prefill uses.  The slice samples the first token
+        with the one-shot key-split order (split after prefill, batch-1
+        sampler), so the stream is bit-for-bit the cold admission's while
+        TTFT pays for ``s - prefilled0`` tokens instead of ``s``."""
+        s = len(req.prompt)
+        with self._mesh_ctx():
+            self._caches = self._set_tables(
+                self._caches, jnp.asarray(slot), self._table_row(blocks)
+            )
+        n = s - prefilled0
+        t = self._bucket_len(n)
+        b = self.num_slots
+        toks = np.zeros((b, t), np.int32)
+        toks[slot, :n] = req.prompt[prefilled0:]
+        pos = np.zeros((b,), np.int32)
+        pos[slot] = prefilled0
+        active = np.zeros((b,), bool)
+        active[slot] = True
+        lengths = np.zeros((b,), np.int32)
+        lengths[slot] = n
+        with annotate("serve/admission_prefill"), self._mesh_ctx():
+            tok_d, self._caches, key_d = self._suffix_fn(t)(
+                self.params, self._caches, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(active), jnp.asarray(lengths),
+                jnp.asarray(slot, jnp.int32), jax.random.PRNGKey(req.seed),
+            )
+        self.prefill_tokens += n
+        # one packed [tok0, finite] fetch per admission
+        arr = self._fetch(tok_d)
+        tok0, ok = int(arr[0]), bool(arr[1])
+        now = self.now()
+        if not ok:
+            self.quarantined += 1
+            self._release_blocks(blocks, req.uid)
+            return self._emit_finished(FinishedRequest(
+                req.uid, np.zeros((0,), np.int32), "error", s,
+                req.arrival, now, now, now,
+            ))
+        # miss blocks are fully written by the slice above — registered
+        # only after the finite check so a poisoned page is never indexed
+        for i in range(n_hit, len(hashes)):
+            self.allocator.register(blocks[i], hashes[i])
+        self.tokens_generated += 1
+        self._trace("first_token", uid=req.uid)
+        done = self._finish_at_admission(req, tok0, blocks, now)
+        if done is not None:
+            return done
+        with self._mesh_ctx():
+            self._state = self._admit_jit(
+                self._state, jnp.asarray(slot), tok_d[0], key_d,
+                jnp.asarray(s, jnp.int32),
+                jnp.asarray(req.max_new_tokens, jnp.int32),
+            )
+        self._slots[slot] = RequestState(
+            request=req, slot=slot, blocks=blocks, tokens=[tok0],
+            n_generated=1, admitted_at=now, prefilled=s, first_token_at=now,
+            block_hashes=list(hashes), registered=len(hashes),
+        )
+        return None
+
     def _admission_prefill(self, req: Request):
         """Batch-1 prefill for admission.  Bucketed where parity-safe (one
         trace per power-of-two length bucket); exact-length otherwise."""
@@ -1387,7 +1727,7 @@ class ContinuousBatchingEngine:
             )
 
     def _admit(
-        self, req: Request, slot: int, blocks: list[int]
+        self, req: Request, slot: int, blocks: list[int], hashes=()
     ) -> Optional[FinishedRequest]:
         with annotate("serve/admission_prefill"):
             tok0_d, small, pos0, key = self._admission_prefill(req)
@@ -1406,6 +1746,8 @@ class ContinuousBatchingEngine:
         self._trace("first_token", uid=req.uid)
         done = self._finish_at_admission(req, tok0, blocks, now)
         if done is not None:
+            # finish-at-admission never installs the prefilled cache into
+            # the pool, so the blocks hold no content — nothing registers
             return done
         table_row = self._table_row(blocks)
         nb = len(blocks)
@@ -1421,10 +1763,15 @@ class ContinuousBatchingEngine:
                 self._state, jnp.asarray(slot), tok0_d[0], key, pos0,
                 jnp.asarray(req.max_new_tokens, jnp.int32),
             )
+        # the install above span-writes every prompt page: full blocks are
+        # now content-complete and become hittable
+        for i, h in enumerate(hashes):
+            self.allocator.register(blocks[i], h)
         self._slots[slot] = RequestState(
             request=req, slot=slot, blocks=blocks, tokens=[tok0],
             n_generated=1, admitted_at=now, prefilled=len(req.prompt),
-            first_token_at=now,
+            first_token_at=now, block_hashes=list(hashes),
+            registered=len(hashes),
         )
         return None
 
@@ -1490,6 +1837,10 @@ class ContinuousBatchingEngine:
             self._state = self._deactivate_jit(
                 self._state, jnp.asarray(rs.slot)
             )
+        # a preempted stream's blocks stay hittable: the deterministic
+        # restart walks the same chain and resumes from the cached prefix
+        # instead of re-prefilling from scratch
+        self._register_blocks(rs)
         self._release_blocks(rs.blocks, rs.request.uid)
         self._slots[rs.slot] = None
         self._queue.appendleft(rs.request)
@@ -1571,6 +1922,11 @@ class ContinuousBatchingEngine:
                 )
             if not rs.done:
                 continue
+            if rs.finish_reason != "error":
+                # extend the hash chain over the generated tokens so a
+                # multi-turn follow-up (history + reply) hits; quarantined
+                # streams register nothing (their pages are suspect)
+                self._register_blocks(rs)
             self._release_blocks(rs.blocks, rs.request.uid)
             self._slots[rs.slot] = None
             req = rs.request

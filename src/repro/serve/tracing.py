@@ -8,9 +8,12 @@ Three layers, all zero-overhead when disabled:
        submitted -> admitted -> prefill_chunk* -> first_token ->
        decode_chunk* -> finished(reason)
 
-   plus block-alloc/free events, preemptions and fired faults, each a
-   flat JSON-serialisable dict ``{"t": ..., "event": ..., "uid": ...,
-   **fields}`` pushed through a pluggable sink (:class:`JsonlSink` for
+   plus block-alloc/free events, preemptions, fired faults and the
+   prefix-cache lifecycle (``prefix_hit`` when an admission walk reuses
+   cached blocks — with ``n_blocks``/``n_tokens`` — and ``block_cow``
+   when a fully-cached prompt copies its final shared page before
+   diverging), each a flat JSON-serialisable dict ``{"t": ...,
+   "event": ..., "uid": ..., **fields}`` pushed through a pluggable sink (:class:`JsonlSink` for
    structured JSONL on disk, :class:`ListSink` for in-memory assertions).
    Timestamps come from the ENGINE's clock — the same ``now()`` that
    drives deadline math and the latency histograms — so a chaos failure

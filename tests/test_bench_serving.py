@@ -85,6 +85,25 @@ def test_bench_serving_smoke(capsys, tmp_path):
     # asserted by the dedicated CB parity suite (the kernel is documented
     # as allclose-at-f32, so the bench smoke only requires the flag)
     assert kfields["streams_match"] in ("0", "1")
+    # prefix caching: the warm pass over a shared system prompt must cut
+    # admission work (virtual-tick TTFT p50) by >= 3x, hit the cache, and
+    # stay bit-for-bit with the no-cache engine on both admission paths —
+    # with zero leaked blocks despite the warm LRU
+    assert "serving/prefix_cache" in names
+    pfields = dict(
+        kv.split("=")
+        for kv in by_name["serving/prefix_cache"].split(",", 2)[2].split(";")
+    )
+    assert float(pfields["warm_speedup"].rstrip("x")) >= 3.0
+    assert float(pfields["hit_rate"]) > 0.0
+    assert pfields["streams_match_oneshot"] == "1"
+    assert pfields["streams_match_chunked"] == "1"
+    assert pfields["leaked"] == "0"
+    # the archived metrics artifact is schema-stable: the prefix-cache
+    # counters ride along even for engines that never enable the cache
+    for name in ("prefix_cache_hits_total", "prefix_cache_misses_total",
+                 "prefix_cache_cow_total", "prefix_cache_hit_tokens_total"):
+        assert name in snap["counters"]
 
 
 def test_run_py_writes_serving_artifact(tmp_path, monkeypatch):

@@ -131,6 +131,308 @@ class TestBlockAllocator:
             self._check_alloc_trace(num_blocks, ops)
 
 
+class TestPrefixCacheAllocator:
+    """Refcounts, the content-hash index and the LRU of cached blocks —
+    the allocator surface automatic prefix caching runs on."""
+
+    def test_unref_parks_registered_block_still_hittable(self):
+        a = kv_pool.BlockAllocator(4)
+        b = a.alloc(1)[0]
+        assert a.register(b, 123)
+        a.unref([b])
+        # "free" means unreferenced: the block counts as allocatable AND
+        # its content is still indexed
+        assert a.free_count == 4 and a.used_count == 0
+        assert a.lookup(123) == b
+
+    def test_hit_ref_revives_cached_block_off_the_lru(self):
+        a = kv_pool.BlockAllocator(2)
+        b = a.alloc(1)[0]
+        a.register(b, 7)
+        a.unref([b])
+        a.ref(b)  # admission hit
+        assert a.refcount(b) == 1 and a.used_count == 1
+        got = a.alloc(1)  # must come from the blank block, not evict b
+        assert got != [b]
+        assert a.alloc(1) is None  # pool genuinely full now
+        a.unref([b] + got)
+        assert a.free_count == 2 and a.lookup(7) == b
+
+    def test_shared_block_refcounts_and_staged_release(self):
+        a = kv_pool.BlockAllocator(4)
+        b = a.alloc(1)[0]
+        a.register(b, 9)
+        a.ref(b)  # second owner
+        a.ref(b)  # third owner
+        assert a.refcount(b) == 3 and a.used_count == 1
+        a.unref([b])
+        a.unref([b])
+        assert a.refcount(b) == 1  # still owned — not evictable
+        blanks = a.alloc(3)
+        assert b not in blanks
+        a.unref([b])
+        assert a.free_count == 1 and a.lookup(9) == b
+
+    def test_lru_evicts_least_recently_released_and_drops_hash(self):
+        a = kv_pool.BlockAllocator(2)
+        b1 = a.alloc(1)
+        a.register(b1[0], 111)
+        b2 = a.alloc(1)
+        a.register(b2[0], 222)
+        a.unref(b1)
+        a.unref(b2)  # release order: b1 is the older parkee
+        got = a.alloc(1)
+        assert got == b1  # LRU: least recently released goes first
+        # the evicted block's identity died with it; the survivor's didn't
+        assert a.lookup(111) is None
+        assert a.lookup(222) == b2[0]
+
+    def test_blank_blocks_allocated_before_cached(self):
+        a = kv_pool.BlockAllocator(3)
+        b = a.alloc(1)
+        a.register(b[0], 1)
+        a.unref(b)
+        got = a.alloc(2)
+        assert b[0] not in got  # blanks first: the cached block survives
+        assert a.lookup(1) == b[0]
+
+    def test_double_unref_rejected_via_refcount(self):
+        a = kv_pool.BlockAllocator(4)
+        got = a.alloc(2)
+        a.unref(got)
+        with pytest.raises(ValueError, match="double free"):
+            a.unref([got[0]])
+        # duplicates inside ONE call are caught too (and atomically:
+        # validation precedes any mutation)
+        b = a.alloc(1)[0]
+        with pytest.raises(ValueError, match="double free"):
+            a.unref([b, b])
+        assert a.refcount(b) == 1
+
+    def test_ref_of_blank_block_rejected(self):
+        a = kv_pool.BlockAllocator(2)
+        with pytest.raises(ValueError, match="blank"):
+            a.ref(0)
+
+    def test_register_requires_live_block_and_stable_hash(self):
+        a = kv_pool.BlockAllocator(4)
+        b1, b2 = a.alloc(2)
+        with pytest.raises(ValueError, match="unreferenced"):
+            a.register(3, 5)  # never allocated
+        assert a.register(b1, 5)
+        assert a.register(b1, 5)  # same (block, hash): idempotent
+        with pytest.raises(ValueError, match="different hash"):
+            a.register(b1, 6)
+        # first writer wins: a duplicate content block stays private
+        assert not a.register(b2, 5)
+        assert a.lookup(5) == b1
+        a.unref([b1, b2])
+        # ... and recycles as blank (still allocatable, never indexed)
+        assert a.free_count == 4 and a.lookup(5) == b1
+
+    def test_metrics_guards_are_independent(self):
+        """Satellite regression: ``alloc`` must count blocks even when the
+        registry hands back no gauge — each instrument is guarded on its
+        own, not nested under another's ``is not None``."""
+
+        class _Counter:
+            def __init__(self):
+                self.value = 0
+
+            def inc(self, n=1):
+                self.value += n
+
+        class _NoGaugeMetrics:
+            def __init__(self):
+                self.counters = {}
+
+            def gauge(self, name):
+                return None  # this registry has no gauges at all
+
+            def counter(self, name):
+                return self.counters.setdefault(name, _Counter())
+
+        m = _NoGaugeMetrics()
+        a = kv_pool.BlockAllocator(4, metrics=m)
+        got = a.alloc(3)
+        assert m.counters["block_allocs_total"].value == 3
+        a.unref(got)
+        assert a.alloc(9) is None
+        assert m.counters["block_alloc_failures_total"].value == 1
+        # eviction counting rides the same independent guard
+        b = a.alloc(1)
+        a.register(b[0], 42)
+        a.unref(b)
+        a.alloc(4)
+        assert m.counters["prefix_cache_evictions_total"].value == 1
+
+    def test_chain_hash_prefix_sensitivity(self):
+        bs = 4
+        t = list(range(16))
+        h = kv_pool.prompt_block_hashes(t, bs)
+        assert len(h) == 4
+        t2 = list(t)
+        t2[0] ^= 1
+        h2 = kv_pool.prompt_block_hashes(t2, bs)
+        # a first-block change reaches every descendant through the chain
+        assert h2[0] != h[0] and h2[3] != h[3]
+        t3 = list(t)
+        t3[-1] ^= 1
+        h3 = kv_pool.prompt_block_hashes(t3, bs)
+        # a last-block change leaves the shared prefix ids alone
+        assert h3[:3] == h[:3] and h3[3] != h[3]
+        # the trailing partial block has no identity yet
+        assert len(kv_pool.prompt_block_hashes(t[:15], bs)) == 3
+        # host-stream identity: a numpy int32 stream hashes exactly like
+        # python ints (what makes hits mesh/dtype-independent)
+        assert kv_pool.prompt_block_hashes(np.asarray(t, np.int32), bs) == h
+
+    def test_copy_block_duplicates_page_without_touching_source(self):
+        pool = jax.random.normal(jax.random.PRNGKey(0), (4, 2, 2, 3))
+        out = np.asarray(kv_pool.copy_block(pool, 1, 3))
+        ref = np.asarray(pool)
+        np.testing.assert_array_equal(out[3], ref[1])  # dst is the copy
+        np.testing.assert_array_equal(out[1], ref[1])  # src untouched
+        np.testing.assert_array_equal(out[:1], ref[:1])
+        np.testing.assert_array_equal(out[2], ref[2])
+
+    @staticmethod
+    def _check_prefix_trace(num_blocks: int, block_size: int, ops) -> None:
+        """Invariant driver for one admission/share/release trace over the
+        refcounted allocator, mirroring the scheduler's hit-walk protocol
+        (lookup -> ref hits -> alloc tail -> register misses).  Checked at
+        every step:
+
+        * conservation — ``free_count + #{blocks with refcount>0} ==
+          num_blocks``, and the allocator's refcounts match the model's
+          outstanding per-block owner counts exactly;
+        * no eviction of referenced blocks — every block ``alloc`` hands
+          out has model refcount 0;
+        * hash-index liveness — every indexed hash maps to the block that
+          was registered under it and that block is never blank/reclaimed;
+        * failed allocs change no ownership;
+        * double-unref raises exactly when the model refcount is 0.
+
+        ``ops`` is a list of (kind, x, y) int triples.  Prompts come from
+        a tiny family of 5 token streams so traces actually share
+        prefixes."""
+        a = kv_pool.BlockAllocator(num_blocks)
+        live: dict[int, list[int]] = {}  # uid -> owned block ids (with dups)
+        refs = [0] * num_blocks  # model refcounts
+        content: dict[int, int] = {}  # block -> hash registered on it
+        next_uid = 0
+
+        def check():
+            used = sum(1 for r in refs if r > 0)
+            assert a.free_count + used == num_blocks, "conservation"
+            assert a.used_count == used
+            for b in range(num_blocks):
+                assert a.refcount(b) == refs[b], f"refcount drift at {b}"
+            for h, b in a._block_of.items():
+                assert content.get(b) == h, "hash index points off-content"
+                assert b not in a._blank, "hash index points at blank block"
+
+        for kind, x, y in ops:
+            check()
+            if kind == 0:  # admission hit-walk
+                length = 1 + x % (3 * block_size)
+                fam = y % 5
+                tokens = [fam * 1000 + i for i in range(length)]
+                hashes = kv_pool.prompt_block_hashes(tokens, block_size)
+                nb = kv_pool.blocks_for(length, block_size)
+                hits: list[int] = []
+                for h in hashes:
+                    b = a.lookup(h)
+                    if b is None:
+                        break
+                    hits.append(b)
+                for b in hits:
+                    a.ref(b)
+                    refs[b] += 1
+                got = a.alloc(nb - len(hits))
+                if got is None:
+                    a.unref(hits)
+                    for b in hits:
+                        refs[b] -= 1
+                    continue
+                for b in got:
+                    assert refs[b] == 0, "alloc stole a referenced block"
+                    content.pop(b, None)  # reclaimed: old identity is gone
+                    refs[b] = 1
+                blocks = hits + got
+                for i in range(len(hits), len(hashes)):
+                    if a.register(blocks[i], hashes[i]):
+                        content[blocks[i]] = hashes[i]
+                live[next_uid] = blocks
+                next_uid += 1
+            elif kind == 1 and live:  # release = unref (blocks stay cached)
+                uid = sorted(live)[x % len(live)]
+                blocks = live.pop(uid)
+                a.unref(blocks)
+                for b in blocks:
+                    refs[b] -= 1
+            elif kind == 2 and live:  # release + double-unref probe
+                uid = sorted(live)[x % len(live)]
+                blocks = live.pop(uid)
+                a.unref(blocks)
+                for b in blocks:
+                    refs[b] -= 1
+                dead = [b for b in blocks if refs[b] == 0]
+                if dead:
+                    with pytest.raises(ValueError, match="double free"):
+                        a.unref(dead[:1])
+                elif blocks:
+                    # still shared by another request: unref is legal...
+                    a.unref(blocks[:1])
+                    refs[blocks[0]] -= 1
+                    a.ref(blocks[0])  # ...and reversible
+                    refs[blocks[0]] += 1
+        check()
+        for blocks in live.values():  # drain: the pool must reconcile
+            a.unref(blocks)
+            for b in blocks:
+                refs[b] -= 1
+        assert all(r == 0 for r in refs)
+        assert a.free_count == num_blocks and a.used_count == 0
+        check()
+
+    def test_property_random_share_release_traces(self):
+        """Hypothesis sweep over arbitrary admission/share/release
+        interleavings of the refcount/LRU/hash invariants."""
+        hypothesis = pytest.importorskip("hypothesis")
+        st = hypothesis.strategies
+
+        @hypothesis.given(
+            num_blocks=st.integers(1, 24),
+            block_size=st.sampled_from([1, 2, 4, 8]),
+            ops=st.lists(
+                st.tuples(
+                    st.integers(0, 2), st.integers(0, 31), st.integers(0, 7)
+                ),
+                max_size=60,
+            ),
+        )
+        @hypothesis.settings(deadline=None, max_examples=60)
+        def run(num_blocks, block_size, ops):
+            self._check_prefix_trace(num_blocks, block_size, ops)
+
+        run()
+
+    def test_random_share_release_traces_seeded(self):
+        """Seeded fallback for the same property where hypothesis isn't
+        installed."""
+        rng = np.random.default_rng(1)
+        for _ in range(50):
+            num_blocks = int(rng.integers(1, 25))
+            block_size = int(rng.choice([1, 2, 4, 8]))
+            ops = [
+                (int(rng.integers(0, 3)), int(rng.integers(0, 32)),
+                 int(rng.integers(0, 8)))
+                for _ in range(int(rng.integers(0, 61)))
+            ]
+            self._check_prefix_trace(num_blocks, block_size, ops)
+
+
 class TestPagedReadWrite:
     B, MB, BS, H, D, NB = 2, 3, 4, 2, 8, 7
 

@@ -1,0 +1,287 @@
+"""Automatic prefix caching: bit-for-bit stream parity with the cold
+engine and the lockstep DecodeEngine oracle (the acceptance criterion),
+copy-on-write on fully-cached prompts, multi-turn chain extension over
+generated tokens, LRU eviction under a tiny pool, the dense-layout /
+unsafe-config gates, kernel-read-path parity, and the hit/miss/CoW
+metrics + trace events."""
+
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.quantization import QuantConfig
+from repro.models import api
+from repro.serve.engine import DecodeEngine, SamplerConfig
+from repro.serve.scheduler import ContinuousBatchingEngine
+from repro.serve.tracing import ListSink, RequestTracer
+
+KEY = jax.random.PRNGKey(1)
+QC = QuantConfig(mode="pquant", r=16, num_experts=1)
+CFG = ModelConfig(name="t", family="decoder", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=48, vocab_size=64, quant=QC)
+SWA_CFG = ModelConfig(name="t2", family="decoder", n_layers=6, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=48, vocab_size=64,
+                      quant=QC, attn_type="swa", window_size=4,
+                      global_every=3, rope_theta_local=1e3)
+MAX_LEN = 48
+BS = 8  # block size everywhere below
+SCFG = SamplerConfig(temperature=0.7, top_k=10, max_new_tokens=6)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_model(KEY, CFG)[0]
+
+
+@pytest.fixture(scope="module")
+def reference(params):
+    return DecodeEngine(params, CFG, MAX_LEN)
+
+
+def _toks(seed, n):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, 64), np.int32
+    )
+
+
+# One 17-token shared system prefix (spans two full blocks + 1), plus
+# per-request suffixes of ragged length — the canonical hit shape.
+PREFIX = _toks(99, 17)
+SUFFIXES = {0: 4, 1: 1, 2: 6, 3: 3}
+
+
+def _shared_prompt(uid):
+    return np.concatenate([PREFIX, _toks(200 + uid, SUFFIXES[uid])])
+
+
+def _engine(params, *, prefix_cache=True, num_blocks=None, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("chunk", 4)
+    eng = ContinuousBatchingEngine(
+        params, CFG, max_len=MAX_LEN, scfg=SCFG, layout="paged",
+        block_size=BS, prefix_cache=prefix_cache,
+        num_blocks=num_blocks, **kw,
+    )
+    return eng
+
+
+def _drained(eng):
+    """The zero-leak drain invariant: with the cache warm, released
+    blocks park on the LRU but still count as free."""
+    return (
+        eng.allocator.free_count == eng.num_blocks
+        and eng.allocator.used_count == 0
+        and eng.snapshot()["gauges"]["pool_blocks_used"] == 0
+    )
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 3])
+def test_warm_hits_are_bit_for_bit(params, reference, prefill_chunk):
+    """Acceptance: requests sharing a prompt prefix produce streams
+    identical to the per-request DecodeEngine oracle on BOTH the one-shot
+    and chunked admission paths, while later admissions actually hit the
+    cache (hit counters advance and hit_tokens covers the shared
+    blocks)."""
+    want = {
+        uid: reference.generate(
+            jnp.asarray(_shared_prompt(uid)[None]), SCFG, seed=uid
+        )[0]
+        for uid in SUFFIXES
+    }
+    eng = _engine(params, prefill_chunk=prefill_chunk)
+    for uid in SUFFIXES:
+        eng.submit(_shared_prompt(uid), max_new_tokens=6, seed=uid, uid=uid)
+    finished = eng.run()
+    assert sorted(f.uid for f in finished) == sorted(SUFFIXES)
+    for f in finished:
+        np.testing.assert_array_equal(f.tokens, want[f.uid])
+        assert f.finish_reason == "length"
+    snap = eng.snapshot()["counters"]
+    # 4 prompts x 2 full shared blocks; at least the later admissions hit
+    assert snap["prefix_cache_hits_total"] >= 2
+    assert snap["prefix_cache_misses_total"] >= 2
+    assert snap["prefix_cache_hit_tokens_total"] >= 2 * BS
+    assert _drained(eng)
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 3])
+def test_warm_engine_matches_cold_engine(params, prefill_chunk):
+    """The cache is stream-invisible: the same submission trace through a
+    prefix_cache engine and a cold engine yields identical tokens for
+    every request."""
+    outs = {}
+    for pc in (False, True):
+        eng = _engine(params, prefix_cache=pc, prefill_chunk=prefill_chunk)
+        for uid in SUFFIXES:
+            eng.submit(_shared_prompt(uid), max_new_tokens=6, seed=uid,
+                       uid=uid)
+        outs[pc] = {f.uid: f.tokens for f in eng.run()}
+    assert sorted(outs[True]) == sorted(outs[False])
+    for uid in outs[True]:
+        np.testing.assert_array_equal(outs[True][uid], outs[False][uid])
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 3])
+def test_fully_cached_prompt_copies_on_write(params, reference,
+                                             prefill_chunk):
+    """A block-aligned prompt resubmitted verbatim is fully cached; the
+    recompute of its final position would write inside the last shared
+    block, so admission copies it to a private page first — and the
+    repeat stream (different seed) still matches its own oracle while the
+    first request's blocks stay pristine for a third hit."""
+    prompt = _toks(7, 3 * BS)  # 24 tokens: exactly 3 full blocks
+    want = {
+        uid: reference.generate(jnp.asarray(prompt[None]), SCFG, seed=uid)[0]
+        for uid in (0, 1, 2)
+    }
+    eng = _engine(params, prefill_chunk=prefill_chunk)
+    for uid in (0, 1, 2):
+        eng.submit(prompt, max_new_tokens=6, seed=uid, uid=uid)
+    finished = eng.run()
+    for f in finished:
+        np.testing.assert_array_equal(f.tokens, want[f.uid])
+    snap = eng.snapshot()["counters"]
+    assert snap["prefix_cache_cow_total"] >= 1
+    assert _drained(eng)
+
+
+def test_multi_turn_chain_extends_over_generated_tokens(params):
+    """On release the hash chain extends over *generated* tokens, so a
+    follow-up prompt of (history + reply) hits blocks the previous turn
+    decoded into — not just its prompt blocks."""
+    prompt = _toks(3, 2 * BS - 2)  # 14 tokens
+    eng = _engine(params, num_slots=1)
+    eng.submit(prompt, max_new_tokens=12, seed=0, uid=0)
+    (turn1,) = eng.run()
+    # turn-2 prompt: the whole turn-1 conversation plus a new user turn
+    history = np.concatenate([prompt, turn1.tokens]).astype(np.int32)
+    assert len(history) >= 3 * BS  # decode extended past the prompt blocks
+    turn2_prompt = np.concatenate([history, _toks(5, 3)])
+    before = eng.snapshot()["counters"]["prefix_cache_hits_total"]
+    eng.submit(turn2_prompt, max_new_tokens=4, seed=1, uid=1)
+    (turn2,) = eng.run()
+    hits = eng.snapshot()["counters"]["prefix_cache_hits_total"] - before
+    assert hits >= 3  # history blocks, including decode-written ones
+    assert turn2.finish_reason == "length"
+    # oracle check: the follow-up matches a cold engine on the same prompt
+    cold = _engine(params, prefix_cache=False, num_slots=1)
+    cold.submit(turn2_prompt, max_new_tokens=4, seed=1, uid=1)
+    (want2,) = cold.run()
+    np.testing.assert_array_equal(turn2.tokens, want2.tokens)
+    assert _drained(eng)
+
+
+def test_eviction_under_tiny_pool_keeps_parity(params):
+    """A pool too small to keep every finished prompt cached evicts
+    least-recently-released blocks (counter advances, hash entries die)
+    and every stream still matches the cold engine."""
+    prompts = {uid: _toks(uid + 40, 11 + 3 * uid) for uid in range(5)}
+    outs = {}
+    for pc in (False, True):
+        eng = _engine(params, prefix_cache=pc, num_slots=1, num_blocks=4)
+        for uid, p in prompts.items():
+            eng.submit(p, max_new_tokens=5, seed=uid, uid=uid)
+        outs[pc] = {f.uid: f.tokens for f in eng.run()}
+        if pc:
+            snap = eng.snapshot()["counters"]
+            assert snap["prefix_cache_evictions_total"] > 0
+            assert _drained(eng)
+    for uid in prompts:
+        np.testing.assert_array_equal(outs[True][uid], outs[False][uid])
+
+
+def test_dense_layout_rejected(params):
+    with pytest.raises(ValueError, match="paged layout"):
+        ContinuousBatchingEngine(
+            params, CFG, num_slots=2, max_len=MAX_LEN, scfg=SCFG,
+            layout="dense", chunk=4, prefix_cache=True,
+        )
+
+
+def test_unsafe_config_declines_to_cold_with_one_log(caplog):
+    """Sliding-window mixers keep ring state outside the paged pool, so
+    prefix_cache=True declines (runs cold) with one warning per config —
+    and the engine still serves correctly."""
+    from repro.serve import scheduler as sched
+
+    sched._PREFIX_DECLINE_LOGGED.clear()
+    params, _ = api.init_model(KEY, SWA_CFG)
+    with caplog.at_level(logging.WARNING, logger=sched.__name__):
+        engines = [
+            ContinuousBatchingEngine(
+                params, SWA_CFG, num_slots=2, max_len=24, scfg=SCFG,
+                layout="paged", block_size=8, chunk=3, prefix_cache=True,
+            )
+            for _ in range(2)
+        ]
+    lines = [r for r in caplog.records if "prefix caching declined" in
+             r.getMessage()]
+    assert len(lines) == 1
+    eng = engines[0]
+    assert not eng.prefix_cache
+    ref = DecodeEngine(params, SWA_CFG, 24)
+    p = _toks(11, 9)
+    want = ref.generate(jnp.asarray(p[None]), SCFG, seed=0)[0]
+    eng.submit(p, max_new_tokens=6, seed=0, uid=0)
+    (f,) = eng.run()
+    np.testing.assert_array_equal(f.tokens, want)
+    # cold admissions count as misses=0 hits=0: the cache never engaged
+    snap = eng.snapshot()["counters"]
+    assert snap["prefix_cache_hits_total"] == 0
+    assert snap["prefix_cache_misses_total"] == 0
+
+
+def test_parity_with_paged_attention_kernel(params, reference, monkeypatch):
+    """Warm cache hits under the Pallas paged-attention read path: greedy
+    streams still equal the DecodeEngine oracle (the kernel reads reused
+    pages exactly as freshly-prefilled ones)."""
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_PAGED_ATTN", "1")
+    assert ops.paged_attention_enabled()
+    scfg = SamplerConfig(temperature=0.0, max_new_tokens=4)
+    want = {
+        uid: reference.generate(
+            jnp.asarray(_shared_prompt(uid)[None]), scfg, seed=uid
+        )[0]
+        for uid in (0, 1, 2)
+    }
+    eng = ContinuousBatchingEngine(
+        params, CFG, num_slots=2, max_len=MAX_LEN, scfg=scfg,
+        layout="paged", block_size=BS, chunk=2, prefix_cache=True,
+    )
+    for uid in (0, 1, 2):
+        eng.submit(_shared_prompt(uid), max_new_tokens=4, seed=uid, uid=uid)
+    finished = eng.run()
+    assert eng.snapshot()["counters"]["prefix_cache_hits_total"] > 0
+    for f in finished:
+        np.testing.assert_array_equal(f.tokens, want[f.uid])
+    assert _drained(eng)
+
+
+def test_trace_events_and_metric_presence(params):
+    """Hits and CoW land on the request timeline (``prefix_hit`` with
+    block/token counts, ``block_cow`` with src/dst) and all five
+    prefix-cache counters are schema-present in the snapshot even before
+    anything fires."""
+    sink = ListSink()
+    eng = _engine(params, tracer=RequestTracer(sink))
+    snap0 = eng.snapshot()["counters"]
+    for name in ("prefix_cache_hits_total", "prefix_cache_misses_total",
+                 "prefix_cache_hit_tokens_total", "prefix_cache_cow_total",
+                 "prefix_cache_evictions_total"):
+        assert snap0[name] == 0
+    prompt = _toks(7, 2 * BS)
+    for uid in (0, 1):
+        eng.submit(prompt, max_new_tokens=4, seed=uid, uid=uid)
+    eng.run()
+    events = {r["event"] for r in sink.records}
+    assert "prefix_hit" in events and "block_cow" in events
+    hit = next(r for r in sink.records if r["event"] == "prefix_hit")
+    assert hit["n_blocks"] >= 1 and hit["n_tokens"] >= BS - 1
+    cow = next(r for r in sink.records if r["event"] == "block_cow")
+    assert cow["src"] != cow["dst"]
