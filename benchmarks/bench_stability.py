@@ -4,8 +4,14 @@ The paper observes BitNet training spikes/diverges at large batch+LR and
 needs checkpoint rollbacks, while pQuant stays stable.  We train both at a
 deliberately hot LR and count instability events (non-finite or >2x loss
 spikes).
+
+Under ``smoke=True`` the pQuant leg runs with QAT health probes on and
+writes the trainer's telemetry artifacts (``metrics_out`` — the
+``validate_snapshot``-schema metrics snapshot; ``trace_out`` — the JSONL
+lifecycle trace), so CI can archive a real train-run trace per commit.
 """
 
+import json
 import time
 
 import numpy as np
@@ -13,23 +19,42 @@ import numpy as np
 from benchmarks.common import quick_train, row, tiny_config
 
 
+def _steps_only(hist):
+    # the history interleaves per-step records with lifecycle events
+    # (recovery/restore); stability stats only read the step records
+    return [h for h in hist if "loss" in h and "event" not in h]
+
+
 def _spikes(hist) -> int:
-    losses = [h["loss"] for h in hist]
+    losses = [h["loss"] for h in _steps_only(hist)]
     spikes = sum(1 for a, b in zip(losses, losses[1:])
                  if not np.isfinite(b) or b > a * 2.0)
     return spikes
 
 
-def run(steps: int = 100) -> dict:
+def run(steps: int = 100, smoke: bool = False,
+        metrics_out: str | None = None, trace_out: str | None = None) -> dict:
+    if smoke:
+        steps = min(steps, 12)
     out = {}
     for mode in ("bitnet", "pquant"):
+        tcfg_kw = {}
+        if mode == "pquant" and (smoke or metrics_out or trace_out):
+            tcfg_kw = {"probes": True, "sensitivity_every": max(steps // 2, 1),
+                       "trace_path": trace_out}
         t0 = time.perf_counter()
-        hist, tr = quick_train(tiny_config(mode), steps=steps, peak_lr=2e-2)
+        hist, tr = quick_train(tiny_config(mode), steps=steps, peak_lr=2e-2,
+                               **tcfg_kw)
         us = (time.perf_counter() - t0) * 1e6 / max(len(hist), 1)
+        step_hist = _steps_only(hist)
         out[mode] = {"spikes": _spikes(hist), "recoveries": tr.recoveries,
-                     "final": hist[-1]["loss"] if hist else float("nan")}
+                     "final": step_hist[-1]["loss"] if step_hist
+                     else float("nan")}
         row(f"fig10/stability/{mode}", us,
             f"spikes={out[mode]['spikes']};final={out[mode]['final']:.3f}")
+        if mode == "pquant" and metrics_out:
+            with open(metrics_out, "w") as f:
+                json.dump(tr.snapshot(), f, indent=2)
     row("fig10/pquant_no_less_stable", 0.0,
         f"ok={out['pquant']['spikes'] <= out['bitnet']['spikes']}")
     return out

@@ -61,8 +61,13 @@ def quick_train(
     batch: int = 8,
     seed: int = 0,
     peak_lr: float | None = None,
+    **tcfg_kw,
 ):
-    """Train on the synthetic corpus; returns (history, trainer)."""
+    """Train on the synthetic corpus; returns (history, trainer).
+
+    Extra keyword args flow into :class:`TrainerConfig` — the stability
+    bench uses this to switch on QAT health probes and the JSONL trace.
+    """
     src = SyntheticSource(cfg.vocab_size, seed=seed)
     dcfg = DataConfig(seq_len=seq, global_batch=batch, seed=seed)
 
@@ -71,7 +76,7 @@ def quick_train(
             yield s, host_batch(src, dcfg, s)
 
     tcfg = TrainerConfig(total_steps=steps, log_every=10**9, ckpt_every=10**9,
-                         peak_lr=peak_lr)
+                         peak_lr=peak_lr, **tcfg_kw)
     tr = Trainer(cfg, tcfg, it())
     hist = tr.run()
     return hist, tr

@@ -80,6 +80,14 @@ def main() -> None:
                 metrics_out="BENCH_serving_metrics.json",
                 trace_out="BENCH_serving_trace.jsonl",
             ),
+            # a short probe-instrumented pQuant train run; its metrics
+            # snapshot + lifecycle trace are the training-side telemetry
+            # artifacts CI validates and archives
+            "stability": lambda: bench_stability.run(
+                smoke=True,
+                metrics_out="BENCH_train_metrics.json",
+                trace_out="BENCH_train_trace.jsonl",
+            ),
         }
     def jsonable(x):
         """Suites return CSV-row lists OR nested result dicts (e.g.

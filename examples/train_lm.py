@@ -11,6 +11,7 @@ two-phase schedule.  Compare baselines by passing --quant-mode
 """
 
 import argparse
+import pathlib
 import sys
 
 from repro.launch.train import main as train_main
@@ -24,6 +25,7 @@ def main():
     ap.add_argument("--out", default="results/train100m_example")
     args = ap.parse_args()
 
+    pathlib.Path(args.out).mkdir(parents=True, exist_ok=True)
     argv = [
         "--arch", "pquant-100m",
         "--quant-mode", args.quant_mode,
@@ -33,13 +35,20 @@ def main():
         "--ckpt-dir", f"{args.out}/ckpt",
         "--history-out", f"{args.out}/history.json",
         "--log-every", "10",
+        # QAT health telemetry artifacts (repro.telemetry): per-step probes
+        # in the history, lifecycle trace + metrics snapshot next to it
+        "--probes",
+        "--sensitivity-every", "50",
+        "--trace-jsonl", f"{args.out}/train_trace.jsonl",
+        "--metrics-out", f"{args.out}/train_metrics.json",
     ]
     if args.smoke:
         argv += ["--steps", "20", "--reduced"]
     else:
         argv += ["--steps", str(args.steps)]
     history = train_main(argv)
-    if history and history[-1]["nll"] < history[0]["nll"]:
+    steps = [h for h in history if "nll" in h and "event" not in h]
+    if steps and steps[-1]["nll"] < steps[0]["nll"]:
         print("OK: loss decreased")
         return 0
     print("WARNING: loss did not decrease")

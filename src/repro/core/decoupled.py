@@ -34,8 +34,20 @@ from repro.core.quantization import (
     fake_quant_linear_weights,
 )
 from repro.core.routing import RouterConfig
+from repro.telemetry import probes
 
 Array = jax.Array
+
+
+def _tap_branch_norms(y1_scaled: Array, y8_scaled: Array) -> None:
+    """Record both decoupled-branch output norms (QAT health probe:
+    ``qat_branch_share8`` — paper §3.2's allocation claim, live)."""
+    probes.add(
+        "branch1_sq", jnp.sum(jnp.square(y1_scaled.astype(jnp.float32)))
+    )
+    probes.add(
+        "branch8_sq", jnp.sum(jnp.square(y8_scaled.astype(jnp.float32)))
+    )
 
 ACTIVATIONS: dict[str, Callable[[Array], Array]] = {
     "silu": jax.nn.silu,
@@ -350,10 +362,12 @@ def decoupled_ffn(
     has_1bit = "w1_up" in params
     has_8bit = "w8_up" in params
 
+    y1s = None
     if has_1bit:
         y1 = _branch1_apply(params, xf, glu, act_fn, qcfg)
         beta = params["beta"].astype(x.dtype) if has_8bit else jnp.asarray(1.0, x.dtype)
-        y = y + beta * y1
+        y1s = beta * y1
+        y = y + y1s
 
     if has_8bit:
         w8 = params["w8_up"]
@@ -368,7 +382,10 @@ def decoupled_ffn(
                 router_cfg,
                 lambda xe: _branch8_apply(params, xe, glu, act_fn, qcfg),
             )
-        y = y + params["alpha"].astype(x.dtype) * y8
+        y8s = params["alpha"].astype(x.dtype) * y8
+        y = y + y8s
+        if probes.active() and has_1bit:
+            _tap_branch_norms(y1s, y8s)
 
     return y.reshape(*lead, d), aux
 
@@ -473,7 +490,8 @@ def decoupled_proj(
         xq = maybe_quant_acts(xf, qcfg)
         w1q = fake_quant_linear_weights(params["w1"], qcfg).astype(x.dtype)
         y1 = xq @ w1q
-    y = params["beta"].astype(x.dtype) * y1
+    y1s = params["beta"].astype(x.dtype) * y1
+    y = y1s
 
     w8q = lambda w: (
         w if qcfg.mode == "none" else quantize_weights_int8_stacked(w)[0]
@@ -492,7 +510,10 @@ def decoupled_proj(
     else:
         assert router_cfg is not None
         y8, aux = routing.route_and_apply(params["router"], xf, router_cfg, branch)
-    y = y + params["alpha"].astype(x.dtype) * y8
+    y8s = params["alpha"].astype(x.dtype) * y8
+    y = y + y8s
+    if probes.active():
+        _tap_branch_norms(y1s, y8s)
     return y.reshape(*lead, -1), aux
 
 

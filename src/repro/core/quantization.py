@@ -17,6 +17,8 @@ from typing import Literal, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.telemetry import probes
+
 Array = jax.Array
 
 # Small epsilon used throughout to avoid division by zero in scale
@@ -213,6 +215,12 @@ def quantize_activations_int8(x: Array) -> tuple[Array, Array]:
     """
     gamma = act_scale_int8(x)
     q = jnp.clip(ste_round(x.astype(jnp.float32) * gamma), -INT8_QMAX, INT8_QMAX)
+    if probes.active():
+        # saturation fraction at the INT8 rails, weighted by element count
+        # so summaries() yields the global rate across all tap sites
+        probes.add_mean(
+            "clip_act", jnp.mean(jnp.abs(q) >= INT8_QMAX), float(x.size)
+        )
     return (q / gamma).astype(x.dtype), gamma
 
 

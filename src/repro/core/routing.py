@@ -19,6 +19,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.telemetry import probes
+
 Array = jax.Array
 
 
@@ -103,6 +105,13 @@ def topk_dispatch(
     one_hot_top1 = jax.nn.one_hot(expert_index[:, 0], n, dtype=probs.dtype)
     ce = jnp.mean(one_hot_top1, axis=0)  # fraction routed (top-1 slot)
     aux_loss = jnp.sum(me * ce) * n * cfg.aux_loss_weight
+
+    if probes.active() and n > 1:
+        # normalized load entropy (1 = balanced, 0 = collapsed) over the
+        # realized top-1 assignment fractions — QAT probe qat_router_entropy
+        cf = ce.astype(jnp.float32)
+        ent = -jnp.sum(cf * jnp.log(cf + 1e-12)) / jnp.log(float(n))
+        probes.add_mean("router_entropy", ent, 1.0)
 
     return {
         "expert_index": expert_index,

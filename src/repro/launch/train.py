@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
 import os
 from typing import Optional
 
@@ -48,6 +49,19 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--history-out", default=None)
+    # telemetry (name registry + trace format: repro.telemetry docs)
+    ap.add_argument("--probes", action="store_true",
+                    help="on-device QAT health probes in the step metrics")
+    ap.add_argument("--sensitivity-every", type=int, default=0,
+                    help="democratization snapshot cadence in steps (0=off)")
+    ap.add_argument("--trace-jsonl", default=None,
+                    help="stream the run lifecycle trace (JSONL) here")
+    ap.add_argument("--history-jsonl", default=None,
+                    help="stream history records as JSONL instead of "
+                         "holding them in host memory")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the trainer's metrics snapshot "
+                         "(validate_snapshot schema) as JSON on exit")
     # multi-host
     ap.add_argument("--coordinator", default=None,
                     help="host:port of jax.distributed coordinator")
@@ -97,16 +111,30 @@ def main(argv: Optional[list[str]] = None):
         accum=args.accum,
         seed=args.seed,
         peak_lr=args.peak_lr,
+        probes=args.probes,
+        sensitivity_every=args.sensitivity_every,
+        trace_path=args.trace_jsonl,
+        history_path=args.history_jsonl,
     )
+    if not logging.getLogger().handlers:
+        logging.basicConfig(
+            level=logging.INFO, format="%(asctime)s %(name)s %(message)s"
+        )
     trainer = Trainer(cfg, tcfg, data)
     history = trainer.run()
     data.close()
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(history, f)
-    if history:
-        print(f"final loss: {history[-1]['loss']:.4f} "
-              f"(recoveries: {trainer.recoveries})")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(trainer.snapshot(), f, indent=2)
+    final = [h for h in history if "loss" in h and "event" not in h]
+    if final:
+        logging.getLogger(__name__).info(
+            "final loss: %.4f (recoveries: %d)",
+            final[-1]["loss"], trainer.recoveries,
+        )
     return history
 
 

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, transformer
+from repro.telemetry import probes
 
 Array = jax.Array
 
@@ -45,7 +46,14 @@ def forward(params, batch, cfg: ModelConfig):
 
 
 def loss_fn(params, batch, cfg: ModelConfig):
-    return _mod(cfg).lm_loss(params, batch, cfg)
+    loss, metrics = _mod(cfg).lm_loss(params, batch, cfg)
+    if probes.active():
+        # fold the QAT health probes recorded during the forward (clip
+        # rates, branch norms, router entropy) into the aux metrics — the
+        # one escape hatch through value_and_grad(has_aux=True)
+        metrics = dict(metrics)
+        metrics.update(probes.summaries())
+    return loss, metrics
 
 
 def prefill(params, batch, cfg: ModelConfig, cache_len: int, last_pos=None):

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_hint
+from repro.telemetry import probes
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -358,7 +359,10 @@ def _run_segments(params, x: Array, cfg: ModelConfig, rope_tabs):
                         metas_r[f"b{bi}"],
                     )
                     aux_acc = aux_acc + aux
-                return (x, aux_acc)
+                # probe values recorded inside a remat-wrapped group must
+                # leave as outputs (the rematerialized trace is a boundary
+                # like a scan body); None when probes are off
+                return (x, aux_acc), probes.scan_drain()
 
             if cfg.remat:
                 one_group = jax.checkpoint(
@@ -372,7 +376,10 @@ def _run_segments(params, x: Array, cfg: ModelConfig, rope_tabs):
                     f"b{bi}": {k: v[r] for k, v in metas[bi].items()}
                     for bi in range(len(seg.blocks))
                 }
-                x, aux_total = one_group((x, aux_total), layer_p, metas_r, r)
+                (x, aux_total), drained = one_group(
+                    (x, aux_total), layer_p, metas_r, r
+                )
+                probes.merge(drained)
         else:
 
             def body(carry, inp):
@@ -385,14 +392,19 @@ def _run_segments(params, x: Array, cfg: ModelConfig, rope_tabs):
                         meta_all[f"b{bi}"],
                     )
                     aux_layer = aux_layer + aux
-                return (x, aux_acc + aux_layer), None
+                # probe values recorded in the body are body-trace tracers:
+                # they leave the scan as ys (None when probes are off) and
+                # scan_merge sums them over the layer axis below
+                return (x, aux_acc + aux_layer), probes.scan_drain()
 
             if cfg.remat:
                 body = jax.checkpoint(
                     body, policy=jax.checkpoint_policies.nothing_saveable
                 )
             xs = (seg_p, {f"b{bi}": metas[bi] for bi in range(len(seg.blocks))})
-            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), xs)
+            with probes.scan_scope():
+                (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+                probes.scan_merge(ys)
     return x, aux_total
 
 

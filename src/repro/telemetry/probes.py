@@ -1,0 +1,350 @@
+"""On-device QAT health probes (see the metric registry in
+``repro.telemetry.__init__``).
+
+Two halves, both riding the existing per-step ``metrics`` transfer so
+enabling probes adds ZERO extra host syncs:
+
+**Forward-pass taps** — the quantizers and the decoupled FFN can't return
+extra values without changing every signature in the model stack, so tap
+sites record into an *ambient collector* instead: a module-global that is
+``None`` except inside the trainer's :func:`collect` scope.  Activation
+clip fractions, branch output norms and router load entropy land here.
+``active()`` is a plain trace-time Python check — when the collector is
+absent (every serving path, and training with probes off) a tap site emits
+no jnp ops at all, which is what makes the disabled-telemetry
+byte-identical-lowering invariant trivial.
+
+**Scan discipline** — values recorded inside a ``jax.lax.scan`` body (the
+layer scan, the grad-accum scan) are tracers of the *body* trace and must
+leave as scan outputs, not via the closure.  The contract:
+
+* wrap the ``lax.scan`` call in :func:`scan_scope` (holds values recorded
+  *before* the scan, so the body's drain can't re-emit them once per
+  iteration);
+* the body returns :func:`scan_drain` as its ``ys``;
+* after the scan, :func:`scan_merge` sums the stacked ``ys`` over the
+  layer axis and re-records them into the ambient collector.
+
+The final escape hatch is ``models.api.loss_fn`` folding
+:func:`summaries` into its aux metrics — from there the values flow
+through ``value_and_grad(..., has_aux=True)`` like any other metric.
+
+**Param-side probes** — :func:`train_step_probes` needs no taps: sign-flip
+rates, scale drift, INT8 weight saturation and the per-branch gradient
+split are pure functions of (old params, new params, grads) computed
+directly inside ``train_step``.  Layer families are classified from tree
+paths (``w8_*`` 8-bit branch, ``w1*`` 1-bit trunk, ``mixer`` attention,
+``embed``/``lm_head``); norm/router/scalar leaves are excluded.
+
+This module deliberately imports nothing from ``repro.core`` at module
+level (the quantizers import *us* for the tap sites); the few shared
+constants are imported lazily inside the probe functions.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+Array = jax.Array
+
+_COLLECTOR: Optional["ProbeCollector"] = None
+
+
+class ProbeCollector:
+    """Accumulates named device scalars by summation.  ``<name>_sum`` /
+    ``<name>_w`` pairs (via :meth:`add_mean`) become weighted means in
+    :func:`summaries`; raw names pass through the ratio rules there."""
+
+    def __init__(self):
+        self.sums: dict[str, Array] = {}
+
+    def add(self, name: str, value) -> None:
+        v = jnp.asarray(value, jnp.float32)
+        self.sums[name] = self.sums[name] + v if name in self.sums else v
+
+    def drain(self) -> dict[str, Array]:
+        d, self.sums = self.sums, {}
+        return d
+
+
+def active() -> bool:
+    """True inside a :func:`collect` scope — a trace-time Python check, so
+    tap sites are free (no ops, no lowering change) when probes are off."""
+    return _COLLECTOR is not None
+
+
+@contextlib.contextmanager
+def collect():
+    """Activate an ambient collector for the enclosed forward/backward
+    trace.  Scopes nest by shadowing (inner scope wins, outer restored)."""
+    global _COLLECTOR
+    prev = _COLLECTOR
+    _COLLECTOR = ProbeCollector()
+    try:
+        yield _COLLECTOR
+    finally:
+        _COLLECTOR = prev
+
+
+def add(name: str, value) -> None:
+    if _COLLECTOR is not None:
+        _COLLECTOR.add(name, value)
+
+
+def add_mean(name: str, value, weight) -> None:
+    """Record one term of a weighted mean (summaries divides the pair)."""
+    if _COLLECTOR is not None:
+        _COLLECTOR.add(name + "_sum", jnp.asarray(value, jnp.float32) * weight)
+        _COLLECTOR.add(name + "_w", jnp.asarray(weight, jnp.float32))
+
+
+# -- scan boundary helpers ---------------------------------------------------
+
+
+@contextlib.contextmanager
+def scan_scope():
+    """Bracket a ``lax.scan`` whose body records probes: values recorded
+    before the scan are held aside (so the body's :func:`scan_drain` only
+    sees in-body records — a pre-scan value returned as ``ys`` would be
+    broadcast and counted once per iteration) and re-added on exit."""
+    if _COLLECTOR is None:
+        yield
+        return
+    held = _COLLECTOR.drain()
+    try:
+        yield
+    finally:
+        for k, v in held.items():
+            _COLLECTOR.add(k, v)
+
+
+def scan_drain() -> Optional[dict[str, Array]]:
+    """Inside a scan body: pull this iteration's records out as ``ys``.
+    Returns None when probes are off (a valid, empty scan output)."""
+    if _COLLECTOR is None:
+        return None
+    return _COLLECTOR.drain()
+
+
+def scan_merge(stacked: Optional[dict[str, Array]]) -> None:
+    """After a scan: fold the stacked ``ys`` back into the ambient
+    collector, summing over the leading (iteration) axis."""
+    if stacked is None:
+        return
+    for name, v in stacked.items():
+        add(name, jnp.sum(v, axis=0))
+
+
+def merge(drained: Optional[dict[str, Array]]) -> None:
+    """Re-record a :func:`scan_drain` result as-is (the non-scan remat
+    boundary: values must leave ``jax.checkpoint`` as outputs too)."""
+    if drained is None:
+        return
+    for name, v in drained.items():
+        add(name, v)
+
+
+def summaries() -> dict[str, Array]:
+    """Drain the ambient collector into final named metrics:
+
+    * ``<name>_sum`` / ``<name>_w`` pairs -> ``qat_<name>`` weighted mean
+      (activation clip rate, router load entropy);
+    * ``branch1_sq`` / ``branch8_sq`` -> ``qat_branch_share8`` =
+      ||alpha*y8||^2 / (||alpha*y8||^2 + ||beta*y1||^2).
+    """
+    if _COLLECTOR is None:
+        return {}
+    d = _COLLECTOR.drain()
+    out: dict[str, Array] = {}
+    for base in sorted(n[: -len("_sum")] for n in d if n.endswith("_sum")):
+        out["qat_" + base] = d[base + "_sum"] / jnp.maximum(d[base + "_w"], 1e-9)
+    if "branch8_sq" in d and "branch1_sq" in d:
+        tot = d["branch8_sq"] + d["branch1_sq"]
+        out["qat_branch_share8"] = d["branch8_sq"] / jnp.maximum(tot, 1e-20)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Param-side probes (no taps needed: pure functions of params/grads)
+# ---------------------------------------------------------------------------
+
+#: Layer families for per-family probes; ``other`` leaves are skipped.
+FAMILIES = ("attn", "ffn1", "ffn8", "embed")
+
+
+def leaf_path(path) -> str:
+    """jtu key path -> "a/b/c" string."""
+    return "/".join(
+        str(getattr(e, "key", getattr(e, "idx", ""))) for e in path
+    )
+
+
+def family_of(key: str) -> Optional[str]:
+    """Classify a parameter path into a probe family (None = skip).
+
+    Branch fragments win over ``mixer`` so a decoupled *projection*
+    (SSM-family mixer: ``w1``/``w8_a``/``w8_b``) splits into trunk/branch
+    like the FFN does.
+    """
+    parts = key.split("/")
+    if any("router" in p or "norm" in p or "subln" in p for p in parts):
+        return None
+    if any(p.startswith("w8") for p in parts):
+        return "ffn8"
+    if any(p.startswith("w1") for p in parts):
+        return "ffn1"
+    if "mixer" in parts:
+        return "attn"
+    if "embed" in parts or "lm_head" in parts:
+        return "embed"
+    return None
+
+
+def _slice_axes(w: Array) -> tuple[int, ...]:
+    """Per-slice reduction axes: the trailing (d_in, d_out) matrix of a
+    possibly layer/expert-stacked leaf — matching how the fake-quant path
+    scales each 2-D weight independently inside the layer scan."""
+    return tuple(range(w.ndim - 2, w.ndim))
+
+
+def _centered_sign(w: Array) -> Array:
+    """The binarizer's sign grid: Sign(W - mu) per slice (paper Eq. 4)."""
+    mu = jnp.mean(w, axis=_slice_axes(w), keepdims=True)
+    return jnp.where(w - mu >= 0, 1.0, -1.0)
+
+
+def _family_leaves(*trees):
+    """Yield (family, leaf_0, leaf_1, ...) for classified >=2-D float
+    leaves, zipping identically-structured trees (params old/new, grads)."""
+    flat = [jtu.tree_flatten_with_path(t)[0] for t in trees]
+    for entries in zip(*flat):
+        key = leaf_path(entries[0][0])
+        leaf = entries[0][1]
+        if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        fam = family_of(key)
+        if fam is None:
+            continue
+        yield (fam,) + tuple(e[1] for e in entries)
+
+
+def train_step_probes(old_params, new_params, grads) -> dict[str, Array]:
+    """All param/grad-side QAT health probes for one step, on device.
+
+    Returns (families present in the tree decide which keys exist — a
+    static, per-config decision so the metrics dict structure is stable):
+
+    * ``qat_flip_<fam>``: fraction of latent weights whose centered sign
+      flipped between ``old_params`` and ``new_params``;
+    * ``qat_scale_drift_absmean`` / ``qat_scale_drift_absmax``: mean
+      relative per-slice drift of the 1-bit lambda / 8-bit amax scales;
+    * ``qat_clip_w8``: fraction of 8-bit-branch weights saturating the
+      INT8 grid (|q| = 127) under the new params;
+    * ``qat_gnorm_ffn8`` / ``qat_gnorm_ffn1`` / ``qat_gnorm_share8``:
+      gradient norms of the two decoupled branches and the 8-bit share
+      of their combined squared norm.
+    """
+    from repro.core.quantization import EPS, INT8_QMAX  # lazy: import cycle
+
+    f32 = jnp.float32
+    zero = jnp.zeros((), f32)
+    flips = {f: zero for f in FAMILIES}
+    counts = {f: 0 for f in FAMILIES}
+    drift = {"absmean": zero, "absmax": zero}
+    drift_n = {"absmean": 0, "absmax": 0}
+    clip8_hits, clip8_n = zero, 0
+    gsq = {"ffn1": zero, "ffn8": zero}
+    gsq_seen = {"ffn1": False, "ffn8": False}
+
+    for fam, w_old, w_new, g in _family_leaves(old_params, new_params, grads):
+        w_old, w_new = w_old.astype(f32), w_new.astype(f32)
+        axes = _slice_axes(w_old)
+        flips[fam] = flips[fam] + jnp.sum(
+            _centered_sign(w_old) != _centered_sign(w_new)
+        )
+        counts[fam] += w_old.size
+        n_slices = w_old.size // (w_old.shape[-1] * w_old.shape[-2])
+        if fam in ("attn", "ffn1"):
+            lam_old = jnp.mean(jnp.abs(w_old), axis=axes) + EPS
+            lam_new = jnp.mean(jnp.abs(w_new), axis=axes) + EPS
+            drift["absmean"] += jnp.sum(jnp.abs(lam_new - lam_old) / lam_old)
+            drift_n["absmean"] += n_slices
+        elif fam == "ffn8":
+            amax_old = jnp.max(jnp.abs(w_old), axis=axes)
+            amax_new = jnp.max(jnp.abs(w_new), axis=axes, keepdims=True)
+            drift["absmax"] += jnp.sum(
+                jnp.abs(amax_new.reshape(amax_old.shape) - amax_old)
+                / (amax_old + EPS)
+            )
+            drift_n["absmax"] += n_slices
+            scale = INT8_QMAX / (amax_new + EPS)
+            q = jnp.round(w_new * scale)
+            clip8_hits += jnp.sum(jnp.abs(q) >= INT8_QMAX)
+            clip8_n += w_new.size
+        if fam in gsq:
+            gsq[fam] = gsq[fam] + jnp.sum(jnp.square(g.astype(f32)))
+            gsq_seen[fam] = True
+
+    out: dict[str, Array] = {}
+    for fam in FAMILIES:
+        if counts[fam]:
+            out[f"qat_flip_{fam}"] = flips[fam] / counts[fam]
+    if drift_n["absmean"]:
+        out["qat_scale_drift_absmean"] = drift["absmean"] / drift_n["absmean"]
+    if drift_n["absmax"]:
+        out["qat_scale_drift_absmax"] = drift["absmax"] / drift_n["absmax"]
+    if clip8_n:
+        out["qat_clip_w8"] = clip8_hits / clip8_n
+    if gsq_seen["ffn8"]:
+        out["qat_gnorm_ffn8"] = jnp.sqrt(gsq["ffn8"])
+    if gsq_seen["ffn1"]:
+        out["qat_gnorm_ffn1"] = jnp.sqrt(gsq["ffn1"])
+    if gsq_seen["ffn8"] and gsq_seen["ffn1"]:
+        out["qat_gnorm_share8"] = gsq["ffn8"] / jnp.maximum(
+            gsq["ffn8"] + gsq["ffn1"], 1e-20
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cadenced democratization snapshot (host-side, off the jit path)
+# ---------------------------------------------------------------------------
+
+
+def sensitivity_snapshot(params, max_elems: int = 1 << 20) -> dict[str, float]:
+    """Democratization statistics per layer family, reusing
+    ``core/sensitivity``'s metrics with the squared latent weight as the
+    sensitivity proxy (the isotropic-input OBS limit: ``s ~ w^2`` when
+    ``H ~ c*I`` — see ``obs_sensitivity``; running real calibration
+    batches per family every N steps would cost a second forward).
+
+    Host-side and cadenced (``TrainerConfig.sensitivity_every``), so it
+    never touches the compiled ``train_step``.  Each family's flattened
+    ``w^2`` population is strided down to ``max_elems`` to bound cost.
+    """
+    from repro.core.sensitivity import (
+        democratization_score,
+        sensitivity_kurtosis,
+        top_fraction_mass,
+    )
+
+    pools: dict[str, list] = {"attn": [], "ffn1": [], "ffn8": []}
+    for fam, w in _family_leaves(params):
+        if fam in pools:
+            pools[fam].append(jnp.square(w.astype(jnp.float32)).reshape(-1))
+    out: dict[str, float] = {}
+    for fam, vecs in pools.items():
+        if not vecs:
+            continue
+        s = jnp.concatenate(vecs)
+        if s.size > max_elems:
+            s = s[:: -(-s.size // max_elems)]
+        out[f"demo_score_{fam}"] = float(democratization_score(s))
+        out[f"demo_kurtosis_{fam}"] = float(sensitivity_kurtosis(s))
+        out[f"demo_top1pct_{fam}"] = float(top_fraction_mass(s, 0.01))
+    return out

@@ -1,0 +1,236 @@
+"""Tracing and profiling hooks shared by the serving stack and the Trainer.
+
+(Originally ``repro.serve.tracing``, PR 7; promoted here so training and
+serving trace through one core.  The serving module re-exports.)
+
+Four layers, all zero-overhead when disabled:
+
+1. **Request lifecycle tracing** — :class:`RequestTracer` turns every
+   request's life into an ordered span record::
+
+       submitted -> admitted -> prefill_chunk* -> first_token ->
+       decode_chunk* -> finished(reason)
+
+   plus block-alloc/free events, preemptions, fired faults and the
+   prefix-cache lifecycle (``prefix_hit`` when an admission walk reuses
+   cached blocks — with ``n_blocks``/``n_tokens`` — and ``block_cow``
+   when a fully-cached prompt copies its final shared page before
+   diverging), each a flat JSON-serialisable dict ``{"t": ...,
+   "event": ..., "uid": ..., **fields}`` pushed through a pluggable sink (:class:`JsonlSink` for
+   structured JSONL on disk, :class:`ListSink` for in-memory assertions).
+   Timestamps come from the ENGINE's clock — the same ``now()`` that
+   drives deadline math and the latency histograms — so a chaos failure
+   or a ``SchedulerStall`` ships a replayable timeline on one timebase
+   instead of a bare exception.  ``tracer=None`` (the default) skips
+   every emit site behind one ``is not None`` check.
+
+2. **Profiler annotations** — :func:`annotate` is a context manager
+   combining ``jax.profiler.TraceAnnotation`` (host-timeline span) with
+   ``jax.named_scope`` (HLO metadata, so device kernel time is
+   attributable by name in a TensorBoard trace).  It is safe both around
+   host-side dispatch (the scheduler's chunk boundaries) and inside
+   traced code (the chunk fns, the kernel dispatch wrappers in
+   ``repro.kernels.ops``) — it never changes numerics or lowered
+   programs, only metadata, and it is applied unconditionally so
+   enabling/disabling metrics cannot perturb compiled programs.
+
+3. **Trace capture** — :func:`maybe_profile` brackets a region with
+   ``jax.profiler.start_trace`` / ``stop_trace`` when the opt-in
+   ``REPRO_PROFILE_DIR`` env var is set (no-op otherwise), giving a
+   TensorBoard-loadable trace where the :func:`annotate` names attribute
+   prefill / decode / kernel time.  Re-entrant (inner brackets no-op) and
+   best-effort: a broken profiler must never break serving.
+
+4. **Training lifecycle tracing** — :class:`TrainTracer` is the Trainer's
+   counterpart to :class:`RequestTracer`: per-step records plus
+   checkpoint / restore / recovery / heartbeat events through the same
+   sinks, self-clocked (run-relative seconds) because a training run has
+   no engine clock.  Event vocabulary and a reader example live in
+   ``repro.telemetry.__init__``'s "reading a train trace" section.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import logging
+import os
+from typing import IO, Callable, Optional, Union
+
+import jax
+
+_log = logging.getLogger(__name__)
+
+#: Opt-in profiler env var: set to a directory to capture a
+#: TensorBoard-readable trace of engine runs.
+PROFILE_DIR_ENV = "REPRO_PROFILE_DIR"
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Profiler span ``name`` for the enclosed region: a host-timeline
+    ``TraceAnnotation`` plus a ``named_scope`` so any ops traced inside
+    carry the name into HLO metadata (kernel attribution in the device
+    timeline).  Metadata only — numerics and lowering semantics are
+    untouched."""
+    with jax.profiler.TraceAnnotation(name), jax.named_scope(name):
+        yield
+
+
+# start_trace is process-global and errors when nested: engine runs can
+# nest (a CB engine warms itself with an inner run), so the outermost
+# bracket wins and inner ones no-op.
+_PROFILING = False
+
+
+@contextlib.contextmanager
+def maybe_profile(tag: str = "serve"):
+    """Bracket a region with ``jax.profiler.start_trace/stop_trace`` into
+    ``$REPRO_PROFILE_DIR`` when that env var is set; otherwise (or when a
+    bracket is already active) a no-op.  Best-effort by design: profiling
+    failures are logged once and swallowed — observability must never
+    take serving down."""
+    global _PROFILING
+    out = os.environ.get(PROFILE_DIR_ENV)
+    if not out or _PROFILING:
+        yield
+        return
+    started = False
+    try:
+        jax.profiler.start_trace(out)
+        started = True
+    except Exception as e:  # noqa: BLE001 — profiler breakage must not break serving
+        _log.warning("profiler start_trace(%s) failed for %s: %s", out, tag, e)
+    _PROFILING = started or _PROFILING
+    try:
+        with annotate(f"repro/{tag}"):
+            yield
+    finally:
+        if started:
+            _PROFILING = False
+            try:
+                jax.profiler.stop_trace()
+            except Exception as e:  # noqa: BLE001
+                _log.warning("profiler stop_trace failed for %s: %s", tag, e)
+
+
+# ---------------------------------------------------------------------------
+# Request tracing
+# ---------------------------------------------------------------------------
+
+
+class ListSink:
+    """In-memory sink: ``records`` is the list of emitted event dicts (the
+    test suite's sink)."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+
+    def write(self, record: dict) -> None:
+        self.records.append(record)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """Structured JSONL sink: one compact JSON object per line, flushed
+    per event so a crash mid-run still leaves a replayable prefix (the
+    whole point of shipping a timeline with a failure)."""
+
+    def __init__(self, path_or_file: Union[str, os.PathLike, IO[str]]):
+        if hasattr(path_or_file, "write"):
+            self._f: IO[str] = path_or_file
+            self._owns = False
+        else:
+            self._f = open(path_or_file, "w", encoding="utf-8")
+            self._owns = True
+
+    def write(self, record: dict) -> None:
+        self._f.write(json.dumps(record, sort_keys=True, default=str) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._owns:
+            self._f.close()
+
+
+class RequestTracer:
+    """Emit lifecycle events through a sink.
+
+    The tracer is deliberately thin: it holds no per-request state (the
+    sink's output IS the record — no unbounded in-memory lists riding
+    along with the bounded histograms), stamps nothing itself (callers
+    pass ``t`` from the one engine clock), and counts events so tests can
+    assert emission without parsing."""
+
+    def __init__(self, sink):
+        self.sink = sink
+        self.events = 0
+
+    def emit(
+        self, event: str, *, t: float, uid: Optional[int] = None, **fields
+    ) -> None:
+        record = {"t": float(t), "event": str(event)}
+        if uid is not None:
+            record["uid"] = int(uid)
+        for k, v in fields.items():
+            if v is not None:
+                record[k] = v
+        self.events += 1
+        self.sink.write(record)
+
+    def close(self) -> None:
+        self.sink.close()
+
+
+class TrainTracer:
+    """Training-run lifecycle tracer: the Trainer's twin of
+    :class:`RequestTracer`, writing through the same pluggable sinks.
+
+    Differences from the request tracer, both deliberate:
+
+    * **self-clocked** — a training run has no engine clock, so the tracer
+      stamps events itself with run-relative seconds (injectable ``clock``
+      with ``now()`` for tests — a :class:`~repro.telemetry.metrics.ManualClock`
+      gives deterministic timestamps);
+    * **step-keyed, not uid-keyed** — every event carries the training
+      ``step`` instead of a request uid.
+
+    Like the request tracer it holds no state beyond an event count: the
+    sink's output IS the record, flushed per event so a crashed run still
+    leaves a replayable prefix up to the failing step.
+    """
+
+    def __init__(self, sink, clock=None):
+        from repro.telemetry.metrics import MonotonicClock
+
+        self.sink = sink
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.events = 0
+
+    def emit(self, event: str, *, step: Optional[int] = None, **fields) -> None:
+        record = {"t": float(self.clock.now()), "event": str(event)}
+        if step is not None:
+            record["step"] = int(step)
+        for k, v in fields.items():
+            if v is not None:
+                record[k] = v
+        self.events += 1
+        self.sink.write(record)
+
+    def close(self) -> None:
+        self.sink.close()
+
+
+def fault_hook(
+    tracer: RequestTracer, now: Callable[[], float]
+) -> Callable[[str, dict], None]:
+    """Adapter: a :class:`repro.serve.faults.FaultInjector` ``on_fire``
+    callback that lands every fired fault on the request timeline (event
+    ``fault_<kind>``), timestamped by the engine clock."""
+
+    def on_fire(kind: str, info: dict) -> None:
+        tracer.emit(f"fault_{kind}", t=now(), **info)
+
+    return on_fire

@@ -71,9 +71,44 @@ class TestDemocratization:
         flat = jnp.ones((64, 64)) + 0.01 * jax.random.normal(rng, (64, 64))
         assert float(sensitivity_kurtosis(heavy)) > float(sensitivity_kurtosis(flat))
 
+    def test_one_hot_limit(self):
+        """All mass on a single weight: entropy -> 0, so the score hits
+        the differentiated-landscape floor (the uniform limit is the
+        other invariant, test_uniform_vs_peaked)."""
+        one_hot = jnp.zeros((64, 64)).at[0, 0].set(1.0)
+        assert float(democratization_score(one_hot)) < 0.01
+        assert float(top_fraction_mass(one_hot, 0.01)) > 0.999
+
+    def test_monotone_in_concentration(self):
+        """Shrinking the outlier population (same total spike magnitude
+        class) must move every statistic the same way: score up toward
+        democratized, top-1% mass down, log-kurtosis down — the three
+        views agree on the concentration ordering."""
+        def spiked(k):
+            return jnp.ones(4096).at[:k].set(1e6)
+
+        pops = [spiked(k) for k in (4, 64, 512)]
+        scores = [float(democratization_score(s)) for s in pops]
+        top1 = [float(top_fraction_mass(s, 0.01)) for s in pops]
+        kurt = [float(sensitivity_kurtosis(s)) for s in pops]
+        assert scores == sorted(scores), scores
+        assert top1 == sorted(top1, reverse=True), top1
+        assert kurt == sorted(kurt, reverse=True), kurt
+
 
 def test_max_pool_vis():
     s = jnp.arange(64.0).reshape(8, 8)
     p = max_pool_2d(s, (2, 2))
     assert p.shape == (2, 2)
     assert float(p[1, 1]) == 63.0
+
+
+def test_max_pool_shapes_and_idempotence():
+    s = jnp.arange(64.0).reshape(8, 8)
+    p = max_pool_2d(s, (4, 4))
+    assert p.shape == (4, 4)
+    # pooling to the input's own shape is the identity...
+    np.testing.assert_array_equal(np.asarray(max_pool_2d(p, (4, 4))),
+                                  np.asarray(p))
+    # ...and pooling to (1, 1) is the global max
+    assert float(max_pool_2d(s, (1, 1))[0, 0]) == 63.0

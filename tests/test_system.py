@@ -156,7 +156,13 @@ class TestFaultTolerance:
             tr.step_fn = poisoned
             hist = tr.run()
             assert tr.recoveries == 1
-            assert all(np.isfinite(h["loss"]) for h in hist)
+            steps = [h for h in hist if "event" not in h]
+            assert all(np.isfinite(h["loss"]) for h in steps)
+            # the rollback is recorded, not silent (PR 10): the history
+            # carries a recovery event with the restored-from step
+            recs = [h for h in hist if h.get("event") == "recovery"]
+            assert len(recs) == 1
+            assert recs[0]["from_step"] == 6 and recs[0]["recoveries"] == 1
 
 
 class TestGradAccum:
